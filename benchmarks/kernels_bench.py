@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: per-call wall time of the XLA reference path
+on CPU (the Pallas kernels target TPU; interpret-mode timings are not
+meaningful, so we time the oracle path and report the kernel's derived
+arithmetic/bandwidth characteristics from its block structure).
+
+derived column: modelled VMEM working set + MXU utilization facts used
+in EXPERIMENTS.md's kernel notes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan_ref
+from repro.kernels.vfl_matmul import vfl_matmul_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # vfl_matmul: 1-of-4-clients slice of a 2048-wide feature space
+    x = jax.random.normal(key, (512, 512), jnp.float32)
+    w = jax.random.normal(key, (2048, 1024), jnp.float32)
+    f = jax.jit(lambda a, b: vfl_matmul_ref(a, b, 512))
+    us = _time(f, x, w)
+    dense_flops = 512 * 2048 * 1024 * 2
+    sparse_flops = 512 * 512 * 1024 * 2
+    rows.append(("kernels/vfl_matmul_ref_512x2048x1024", us,
+                 f"mxu_saving={dense_flops/sparse_flops:.1f}x"))
+
+    # flash attention: 1k sequence, GQA 8:2
+    q = jax.random.normal(key, (1, 8, 1024, 64), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 2, 1024, 64), jnp.bfloat16)
+    v = jax.random.normal(key, (1, 2, 1024, 64), jnp.bfloat16)
+    f = jax.jit(lambda a, b, c: flash_attention_ref(a, b, c, causal=True))
+    us = _time(f, q, k, v)
+    vmem_kb = (128 * 64 * 2 * 3 + 128 * 128 * 4) / 1024
+    rows.append(("kernels/flash_attn_ref_b1h8s1024", us,
+                 f"vmem_per_block={vmem_kb:.0f}KiB"))
+
+    # mamba selective scan
+    from repro.kernels.mamba_scan import mamba_scan_ref
+    a = jax.nn.sigmoid(jax.random.normal(key, (1, 512, 256, 16))) * 0.5 + 0.4
+    bxm = jax.random.normal(key, (1, 512, 256, 16)) * 0.2
+    cm = jax.random.normal(key, (1, 512, 16))
+    f = jax.jit(mamba_scan_ref)
+    us = _time(f, a, bxm, cm)
+    rows.append(("kernels/mamba_scan_ref_t512d256n16", us,
+                 "vmem_state=32KiB_per_bd512_tile"))
+
+    # fused MoE router (deepseek shape: 64 experts top-6)
+    from repro.kernels.moe_router import moe_router_ref
+    logits = jax.random.normal(key, (4096, 64), jnp.float32)
+    f = jax.jit(lambda x: moe_router_ref(x, 6))
+    us = _time(f, logits)
+    rows.append(("kernels/moe_router_ref_t4096e64k6", us,
+                 "tile=128x64=32KiB_vmem"))
+
+    # rwkv6 scan
+    r = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    kk = jax.random.normal(key, (1, 512, 4, 64), jnp.float32) * 0.3
+    vv = jax.random.normal(key, (1, 512, 4, 64), jnp.float32)
+    ww = jax.nn.sigmoid(jax.random.normal(key, (1, 512, 4, 64))) * 0.5 + 0.4
+    u = jax.random.normal(key, (4, 64)) * 0.2
+    f = jax.jit(lambda *a: rwkv6_scan_ref(*a))
+    us = _time(f, r, kk, vv, ww, u)
+    rows.append(("kernels/rwkv6_scan_ref_t512h4", us,
+                 "state_vmem=16KiB_fp32"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

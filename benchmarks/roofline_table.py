@@ -1,0 +1,67 @@
+"""Render the roofline table from the dry-run JSON records (deliverable
+g). Produces the markdown table embedded in EXPERIMENTS.md section
+Roofline and CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+_SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                "long_500k": 3}
+
+
+def load_records(mesh=None, exchange=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if exchange and r.get("exchange") != exchange:
+            continue
+        recs.append(r)
+    recs.sort(key=lambda r: (r["arch"], _SHAPE_ORDER.get(r["shape"], 9),
+                             r.get("mesh", "")))
+    return recs
+
+
+def markdown_table(recs):
+    lines = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | "
+        "collective (ms) | bottleneck | useful-FLOP frac | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "ok":
+            t = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {t['compute_s']*1e3:.3f} | {t['memory_s']*1e3:.3f} "
+                f"| {t['collective_s']*1e3:.3f} | {t['bottleneck']} "
+                f"| {t.get('useful_flop_frac', 0):.2f} | ok |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r.get('mesh','-')} "
+                f"| - | - | - | - | - | {r.get('status')}: "
+                f"{r.get('reason', r.get('error', ''))[:60]} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = []
+    for r in load_records(mesh="16x16"):
+        if r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                     t["bound_s"] * 1e6,
+                     f"bottleneck={t['bottleneck']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(markdown_table(recs))

@@ -1,0 +1,46 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV covering: Fig 3-7 (F1 curves), Table II (literature comparison),
+# kernel micro-benchmarks, and the roofline table from the dry-run.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full client range 2..10, 3 seeds (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: figures,table2,kernels,roofline")
+    args = ap.parse_args()
+    which = set((args.only or
+                 "figures,table2,kernels,roofline,ablations").split(","))
+
+    rows = []
+    t0 = time.time()
+    if "kernels" in which:
+        from benchmarks import kernels_bench
+        rows += kernels_bench.run()
+    if "roofline" in which:
+        from benchmarks import roofline_table
+        rows += roofline_table.run()
+    if "table2" in which:
+        from benchmarks import table2
+        rows += table2.run()
+    if "figures" in which:
+        from benchmarks import figures
+        rows += figures.main(paper=args.paper)
+    if "ablations" in which:
+        from benchmarks import ablations
+        rows += ablations.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print(f"# total wall time: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,43 @@
+"""The paper in one script: De-VertiFL vs non-federated training on the
+synthetic MNIST stand-in with vertically partitioned features.
+
+  PYTHONPATH=src python examples/federated_training.py --clients 5
+"""
+import argparse
+
+from repro.core import train_federation
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--dataset", default="mnist",
+                    choices=["mnist", "fmnist", "titanic", "bank"])
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--epochs", type=int, default=5)
+    args = ap.parse_args()
+
+    n = 6000 if args.dataset in ("mnist", "fmnist") else None
+    common = dict(dataset=args.dataset, n_clients=args.clients,
+                  rounds=args.rounds, epochs=args.epochs, n_samples=n)
+
+    print(f"De-VertiFL: {args.clients} clients, {args.dataset}, "
+          f"{args.rounds} rounds x {args.epochs} epochs")
+    fed = train_federation(**common)
+    for h in fed["history"][:: max(1, args.rounds // 5)]:
+        print(f"  round {h['round']:3d}  F1={h['f1']:.3f}  "
+              f"loss={h['loss']:.3f}")
+    print(f"  final F1={fed['final']['f1']:.3f}  "
+          f"acc={fed['final']['acc']:.3f}")
+
+    print("non-federated baseline (no exchange, no FedAvg):")
+    non = train_federation(mode="non_federated", fedavg=False, **common)
+    print(f"  final F1={non['final']['f1']:.3f}  "
+          f"acc={non['final']['acc']:.3f}")
+    gain = fed["final"]["f1"] - non["final"]["f1"]
+    print(f"collaboration gain: +{gain:.3f} F1 "
+          f"({'matches' if gain > 0 else 'CONTRADICTS'} the paper's claim)")
+
+
+if __name__ == "__main__":
+    main()

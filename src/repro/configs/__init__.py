@@ -1,0 +1,30 @@
+"""Architecture configs. Each assigned arch lives in its own module and
+registers itself on import; load_all() imports every module once."""
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    VFLConfig,
+    get_config,
+    list_configs,
+    register,
+)
+
+_MODULES = [
+    "qwen2_7b", "rwkv6_1b6", "jamba_v0_1_52b", "deepseek_moe_16b",
+    "llava_next_34b", "qwen1_5_0_5b", "mixtral_8x22b", "qwen1_5_4b",
+    "gemma2_2b", "seamless_m4t_medium", "paper_mlp",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True

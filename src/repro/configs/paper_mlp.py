@@ -1,0 +1,39 @@
+"""The paper's own models: 3-hidden-layer MLPs (10 neurons each) for
+MNIST / FMNIST (10-class) and Titanic / Bank Marketing (binary).
+Section III-IV of De-VertiFL."""
+from repro.configs.base import ModelConfig, register
+
+
+def _mlp(name, in_features, n_classes, hidden=10, n_hidden=3):
+    return register(ModelConfig(
+        name=name,
+        family="mlp",
+        num_layers=n_hidden,
+        d_model=hidden,
+        num_heads=0,
+        num_kv_heads=0,
+        head_dim=1,
+        d_ff=hidden,
+        vocab_size=in_features,     # = input feature count for MLPs
+        attn_type="none",
+        act="relu",
+        norm_type="layernorm",
+        scan_layers=False,
+        remat=False,
+        source="De-VertiFL section IV",
+    ))
+
+
+MNIST = _mlp("paper-mlp-mnist", 784, 10)
+FMNIST = _mlp("paper-mlp-fmnist", 784, 10)
+TITANIC = _mlp("paper-mlp-titanic", 9, 2)
+BANK = _mlp("paper-mlp-bank", 51, 2)
+
+N_CLASSES = {
+    "paper-mlp-mnist": 10, "paper-mlp-fmnist": 10,
+    "paper-mlp-titanic": 2, "paper-mlp-bank": 2,
+}
+IN_FEATURES = {
+    "paper-mlp-mnist": 784, "paper-mlp-fmnist": 784,
+    "paper-mlp-titanic": 9, "paper-mlp-bank": 51,
+}

@@ -1,0 +1,25 @@
+"""SeamlessM4T-medium [arXiv:2308.11596] — encoder-decoder; speech
+frontend (mel + conformer feature extractor) is a STUB: input_specs
+provides precomputed frame embeddings to the text/decoder transformer.
+12 encoder + 12 decoder layers, d_model 1024, MHA kv=16."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    num_layers=12,              # decoder layers
+    num_encoder_layers=12,
+    is_encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=256206,
+    attn_type="full",
+    modality="audio_text",
+    num_prefix_embeddings=1024,  # encoder frames per sample
+    act="relu",
+    norm_type="layernorm",
+    source="arXiv:2308.11596",
+))

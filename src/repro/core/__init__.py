@@ -1,0 +1,9 @@
+# The paper's primary contribution: the De-VertiFL decentralized
+# vertical-federated training protocol (partitioning, forward-pass
+# HiddenOutputExchange, local backward, P2P FedAvg), plus the baselines
+# it is evaluated against.
+from repro.core.protocol import (  # noqa: F401
+    DeVertiFL, ProtocolConfig, train_federation,
+)
+from repro.core.exchange import hidden_output_exchange  # noqa: F401
+from repro.core.partition import make_partition, masks_for  # noqa: F401

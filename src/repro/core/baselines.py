@@ -1,0 +1,112 @@
+"""Centralized VFL baselines the paper compares against (Table II):
+
+  * SplitNN-style split learning: each client owns a bottom network over
+    ITS OWN features (no zero-padding); a designated server concatenates
+    client embeddings and trains the top; gradients flow back through
+    the cut layer (joint training).
+  * PyVertical / Flower rows in Table II are the same split topology
+    with the paper's participant counts; run_table2() in benchmarks
+    re-creates each configuration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import partition as PT
+from repro.data import synthetic as SD
+from repro.metrics import accuracy, f1_score
+from repro.models import layers as L
+from repro.optim import adam
+
+
+@dataclass
+class SplitNNConfig:
+    dataset: str = "bank"
+    n_clients: int = 2
+    rounds: int = 20
+    epochs: int = 20
+    batch_size: int = 64
+    lr: float = 1e-3
+    hidden: int = 10
+    seed: int = 0
+    n_samples: Optional[int] = None
+
+
+class SplitNN:
+    def __init__(self, cfg: SplitNNConfig):
+        self.cfg = cfg
+        xtr, ytr, xte, yte = SD.make_dataset(cfg.dataset, cfg.n_samples,
+                                             seed=cfg.seed)
+        self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
+        self.n_features = xtr.shape[1]
+        self.n_classes = SD.N_CLASSES[cfg.dataset]
+        self.partition = PT.make_partition(cfg.dataset, self.n_features,
+                                           cfg.n_clients, seed=cfg.seed)
+        self.opt = adam(cfg.lr, max_grad_norm=None)
+        self._step = jax.jit(self._make_step(), donate_argnums=(0, 1))
+
+    def init_params(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.n_clients + 2)
+        params = {}
+        for i, idx in enumerate(self.partition):
+            params[f"bottom_{i}"] = L.dense_init(
+                ks[i], len(idx), cfg.hidden, jnp.float32, bias=True,
+                scale=(2.0 / max(len(idx), 1)) ** 0.5)
+        cut = cfg.hidden * cfg.n_clients
+        params["top_1"] = L.dense_init(ks[-2], cut, cfg.hidden,
+                                       jnp.float32, bias=True)
+        params["top_2"] = L.dense_init(ks[-1], cfg.hidden, self.n_classes,
+                                       jnp.float32, bias=True)
+        return params
+
+    def _forward(self, params, x):
+        hs = []
+        for i, idx in enumerate(self.partition):
+            xi = x[:, jnp.asarray(idx)]
+            hs.append(jax.nn.relu(L.dense(params[f"bottom_{i}"], xi)))
+        h = jnp.concatenate(hs, axis=-1)        # server-side concat
+        h = jax.nn.relu(L.dense(params["top_1"], h))
+        return L.dense(params["top_2"], h)
+
+    def _make_step(self):
+        def step(params, opt_state, xb, yb, i):
+            def lossfn(p):
+                logits = self._forward(p, xb)
+                logp = jax.nn.log_softmax(logits, -1)
+                return -jnp.take_along_axis(logp, yb[:, None], -1).mean()
+            loss, grads = jax.value_and_grad(lossfn)(params)
+            params, opt_state, _ = self.opt.update(grads, opt_state,
+                                                   params, i)
+            return params, opt_state, loss
+        return step
+
+    def train(self, key=None):
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+        params = self.init_params(key)
+        opt_state = self.opt.init(params)
+        rng = np.random.default_rng(cfg.seed)
+        n = len(self.xtr)
+        bs = min(cfg.batch_size, n)
+        nb = n // bs
+        xtr, ytr = jnp.asarray(self.xtr), jnp.asarray(self.ytr)
+        i = jnp.zeros((), jnp.int32)
+        for r in range(cfg.rounds):
+            for e in range(cfg.epochs):
+                order = rng.permutation(n)[:nb * bs]
+                for b in range(nb):
+                    sl = order[b * bs:(b + 1) * bs]
+                    params, opt_state, loss = self._step(
+                        params, opt_state, xtr[sl], ytr[sl], i)
+                    i = i + 1
+        preds = np.asarray(jnp.argmax(
+            jax.jit(self._forward)(params, jnp.asarray(self.xte)), -1))
+        avg = "macro" if self.n_classes > 2 else "binary"
+        return {"f1": f1_score(self.yte, preds, average=avg),
+                "acc": accuracy(self.yte, preds)}

@@ -1,0 +1,48 @@
+"""HiddenOutputExchange (Algorithm 2) -- the paper's knowledge-exchange
+novelty: during the forward pass, every participant broadcasts its
+hidden-layer outputs and each participant SUMS the received tensors with
+its own.
+
+Two implementations with identical semantics:
+
+  * hidden_output_exchange: the literal simulation used by the MLP
+    reproduction -- per-client hidden outputs are stacked on a leading
+    client axis and summed; other clients' contributions are
+    stop-gradient'ed, because in the real deployment a client receives
+    peers' activations as data and the backward pass is local
+    (Algorithm 1 line 12 updates only theta_i).
+
+  * the SPMD form for production models lives in
+    repro.models.transformer.exchange_features (psum over the client
+    mesh axis inside shard_map); tests assert the two agree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hidden_output_exchange(h_all, differentiable=False):
+    """h_all: [n_clients, B, H] per-client hidden outputs.
+
+    Returns [n_clients, B, H]: for client i, h_i + sum of peers' hiddens.
+    With differentiable=False (De-VertiFL), peers' terms carry no
+    gradient; with True, gradients flow to every contributor (this is
+    the VertiComb-style backward exchange used as a baseline).
+    """
+    total = h_all.sum(axis=0, keepdims=True)        # [1, B, H]
+    if differentiable:
+        return jnp.broadcast_to(total, h_all.shape)
+    peers = jax.lax.stop_gradient(total - h_all)    # const contribution
+    return h_all + peers
+
+
+def fedavg(stacked_params):
+    """P2P weight exchange + FedAvg (Algorithm 1 lines 16-19): every
+    client receives every peer's weights and averages. stacked_params
+    has a leading client axis on every leaf; returns the same structure
+    with every client's slot set to the mean."""
+    def avg(leaf):
+        m = leaf.mean(axis=0, keepdims=True)
+        return jnp.broadcast_to(m, leaf.shape)
+    return jax.tree.map(avg, stacked_params)

@@ -1,0 +1,9 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_dataset, synthetic_mnist, synthetic_fmnist, synthetic_titanic,
+    synthetic_bank,
+)
+from repro.data.vertical import (  # noqa: F401
+    round_robin_rows, round_robin_features, random_features, zeropad,
+    client_view,
+)
+from repro.data.lm import markov_lm_batches, MarkovLM  # noqa: F401

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot spots:
+#   vfl_matmul      -- block-sparse first-layer matmul implementing the
+#                      paper's zero-padding without multiplying zeros
+#   flash_attention -- causal/SWA/GQA/softcap flash attention
+#   rwkv6_scan      -- RWKV6 WKV recurrence (data-dependent decay)
+# Each package: kernel (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper), ref.py (pure-jnp oracle). Validated with interpret=True on
+# CPU; TPU is the deployment target.

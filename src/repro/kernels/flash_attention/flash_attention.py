@@ -1,0 +1,124 @@
+"""Flash attention (TPU Pallas): causal / sliding-window / GQA / logit
+-softcap, with online softmax in VMEM scratch.
+
+Grid: (B, H, Sq/bq, Skv/bk) -- the kv dim iterates fastest, so the
+running (m, l, acc) state for one query block lives in VMEM scratch
+across kv steps and is finalized on the last one. Causal and window
+bounds skip whole kv blocks with pl.when (on TPU the block fetch is
+still scheduled, but the MXU work and softmax update are skipped; a
+production variant would also mask the prefetch via a scalar-prefetch
+grid, which we note in EXPERIMENTS.md as future TPU work).
+
+GQA is expressed through the k/v BlockSpec index_map (q head h reads kv
+head h // group) -- kv heads are never replicated in memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, softcap, bq, bk, n_kv):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = kj * bk
+
+    # block-level skip: causal (kv block entirely in the future) and
+    # window (kv block entirely before the window of every query row)
+    conds = []
+    if causal:
+        conds.append(k_start <= q_start + bq - 1)
+        if window is not None:
+            conds.append(q_start - (k_start + bk - 1) < window)
+    run = functools.reduce(jnp.logical_and, conds) if conds else None
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1)
+        acc_ref[...] = alpha[:, None] * acc_ref[...] + p @ v
+        m_ref[...] = m_new
+
+    if run is None:
+        _compute()
+    else:
+        pl.when(run)(_compute)
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_p(q, k, v, *, causal=True, window=None, softcap=0.0,
+                      scale=None, bq=128, bk=128, interpret=False):
+    """q: [B, H, Sq, hd]; k, v: [B, KV, Skv, hd]; H % KV == 0.
+    Returns [B, H, Sq, hd]."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    group = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    scale = scale if scale is not None else hd ** -0.5
+    n_kv = Skv // bk
+
+    grid = (B, H, Sq // bq, n_kv)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max
+            pltpu.VMEM((bq,), jnp.float32),       # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

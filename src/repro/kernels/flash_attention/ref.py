@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0,
+                        scale=None):
+    """q: [B, H, Sq, hd]; k, v: [B, KV, Skv, hd]."""
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    group = H // KV
+    scale = scale if scale is not None else hd ** -0.5
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid key -> zero output (matches kernel's l==0 guard)
+    any_valid = mask.any(axis=-1)
+    p = jnp.where(any_valid[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vr.astype(jnp.float32)).astype(q.dtype)

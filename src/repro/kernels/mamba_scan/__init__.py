@@ -1,0 +1,2 @@
+from repro.kernels.mamba_scan.ops import mamba_scan  # noqa: F401
+from repro.kernels.mamba_scan.ref import mamba_scan_ref  # noqa: F401

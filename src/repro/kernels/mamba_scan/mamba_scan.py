@@ -1,0 +1,77 @@
+"""Mamba (S6) selective-scan kernel (TPU Pallas) -- the Jamba hot spot:
+
+    h_t = a_t * h_{t-1} + b_t        (elementwise over [d, N])
+    y_t = h_t @ c_t                  (contract state dim N)
+
+Grid: (B, D/bd, T/chunk); the chunk dim iterates fastest so the [bd, N]
+state block lives in VMEM scratch across chunk steps. The d_inner dim
+is tiled (bd = 512 lanes) so each grid cell's working set is
+chunk*bd*N*4B -- e.g. 64*512*16*4 = 2 MiB, well inside VMEM, and the
+HBM traffic is O(T*d*N) streamed once, never re-read.
+
+Within a chunk the recurrence is sequential (fori_loop of VPU
+multiply-adds); a log-depth associative formulation would trade 2x the
+VMEM for parallelism -- noted as future TPU work in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, bx_ref, c_ref, o_ref, h_ref, *, chunk):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)      # [chunk, bd, N]
+    bx = bx_ref[0].astype(jnp.float32)    # [chunk, bd, N]
+    c = c_ref[0].astype(jnp.float32)      # [chunk, N]
+
+    def step(i, carry):
+        h, out = carry
+        ai = jax.lax.dynamic_slice_in_dim(a, i, 1, 0)[0]     # [bd, N]
+        bxi = jax.lax.dynamic_slice_in_dim(bx, i, 1, 0)[0]
+        ci = jax.lax.dynamic_slice_in_dim(c, i, 1, 0)[0]     # [N]
+        h = ai * h + bxi
+        yi = jnp.sum(h * ci[None, :], axis=1)                # [bd]
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, yi[None, :], i, 0)
+        return h, out
+
+    h0 = h_ref[...]
+    out0 = jnp.zeros((chunk, a.shape[1]), jnp.float32)
+    h_fin, out = jax.lax.fori_loop(0, chunk, step, (h0, out0))
+    h_ref[...] = h_fin
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def mamba_scan_p(a, bx, c, *, bd=512, chunk=64, interpret=False):
+    """a, bx: [B, T, d_inner, N]; c: [B, T, N]. Returns y: [B, T, d_inner].
+
+    a is the per-step decay exp(dt*A); bx is dt*B_t*x_t; c is C_t.
+    """
+    B, T, D, N = a.shape
+    bd = min(bd, D)
+    chunk = min(chunk, T)
+    assert D % bd == 0 and T % chunk == 0
+    grid = (B, D // bd, T // chunk)
+    spec_a = pl.BlockSpec((1, chunk, bd, N), lambda b, d, t: (b, t, d, 0))
+    spec_c = pl.BlockSpec((1, chunk, N), lambda b, d, t: (b, t, 0))
+    spec_o = pl.BlockSpec((1, chunk, bd), lambda b, d, t: (b, t, d))
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec_a, spec_a, spec_c],
+        out_specs=spec_o,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, c)

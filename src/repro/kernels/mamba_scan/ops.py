@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the Mamba selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan_p
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def mamba_scan(a, bx, c, *, bd=512, chunk=64, interpret=True):
+    """Selective scan; interpret=True for CPU validation."""
+    return mamba_scan_p(a, bx, c, bd=bd, chunk=chunk, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the Mamba selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(a, bx, c):
+    """a, bx: [B, T, D, N]; c: [B, T, N] -> y: [B, T, D]."""
+    def step(h, inp):
+        ai, bxi, ci = inp
+        h = ai * h + bxi                              # [B, D, N]
+        y = jnp.einsum("bdn,bn->bd", h, ci)
+        return h, y
+
+    B, T, D, N = a.shape
+    h0 = jnp.zeros((B, D, N), jnp.float32)
+    args = (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(bx.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, args)
+    return jnp.moveaxis(ys, 0, 1).astype(a.dtype)

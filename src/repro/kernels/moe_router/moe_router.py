@@ -1,0 +1,74 @@
+"""Fused MoE router kernel (TPU Pallas): logits -> softmax -> top-k
+selection with renormalized weights, in one VMEM pass.
+
+DeepSeekMoE routes every token over 64 experts with top-6; the unfused
+XLA path materializes [T, E] probabilities in HBM three times (softmax,
+top_k values, one-hot aux stats). This kernel streams token tiles
+through VMEM once: softmax on the [bt, E] tile, then k iterative
+argmax+mask sweeps (k <= 8, E <= 128 -- VPU-friendly dims), emitting
+packed [bt, k] weights + indices and the per-tile expert-load partial
+sums the aux loss needs.
+
+Grid: (T/bt,). Everything fits one VMEM tile: bt*E*4 = 128*64*4 = 32 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logits_ref, w_ref, idx_ref, load_ref, *, k, E, bt):
+    x = logits_ref[...].astype(jnp.float32)          # [bt, E]
+    m = jnp.max(x, axis=1, keepdims=True)
+    p = jnp.exp(x - m)
+    p = p / jnp.sum(p, axis=1, keepdims=True)        # softmax
+
+    probs = p
+    wsum = jnp.zeros((bt,), jnp.float32)
+    ws = []
+    idxs = []
+    for j in range(k):                                # k small: unrolled
+        best = jnp.argmax(probs, axis=1)              # [bt]
+        bw = jnp.max(probs, axis=1)
+        ws.append(bw)
+        idxs.append(best)
+        wsum = wsum + bw
+        onehot = jax.nn.one_hot(best, E, dtype=probs.dtype)
+        probs = probs * (1.0 - onehot)                # mask selected
+
+    w = jnp.stack(ws, axis=1) / wsum[:, None]         # renormalize
+    idx = jnp.stack(idxs, axis=1).astype(jnp.int32)
+    w_ref[...] = w.astype(w_ref.dtype)
+    idx_ref[...] = idx
+    # per-tile expert stats for the aux loss: routed count + prob mass
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.float32).sum(axis=(0, 1))
+    load_ref[...] = (sel + jnp.sum(p, axis=0))[None, :]
+
+
+def moe_router_p(logits, k, *, bt=128, interpret=False):
+    """logits: [T, E] -> (weights [T,k] renormalized, indices [T,k],
+    stats [T/bt, E] -- per-tile (routed_count + prob_mass) partials)."""
+    T, E = logits.shape
+    bt = min(bt, T)
+    assert T % bt == 0
+    grid = (T // bt,)
+    kernel = functools.partial(_kernel, k=k, E=E, bt=bt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bt, E), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, E), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, k), jnp.float32),
+            jax.ShapeDtypeStruct((T, k), jnp.int32),
+            jax.ShapeDtypeStruct((T // bt, E), jnp.float32),
+        ],
+        interpret=interpret,
+    )(logits)

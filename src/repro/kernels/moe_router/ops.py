@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the fused MoE router kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_router.moe_router import moe_router_p
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bt", "interpret"))
+def moe_router(logits, k, *, bt=128, interpret=True):
+    """Fused softmax + top-k + renorm + aux stats; interpret=True for
+    CPU validation (TPU target uses interpret=False)."""
+    return moe_router_p(logits, k, bt=bt, interpret=interpret)

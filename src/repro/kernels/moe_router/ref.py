@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused MoE router."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_router_ref(logits, k, bt=128):
+    """logits: [T, E] -> (weights [T,k], indices [T,k], stats [T/bt,E])."""
+    T, E = logits.shape
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_i = jax.lax.top_k(p, k)
+    w = top_w / top_w.sum(-1, keepdims=True)
+    bt = min(bt, T)
+    sel = jax.nn.one_hot(top_i, E, dtype=jnp.float32).sum(1)   # [T, E]
+    stats = (sel + p).reshape(T // bt, bt, E).sum(1)
+    return w, top_i.astype(jnp.int32), stats

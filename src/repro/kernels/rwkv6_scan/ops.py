@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the RWKV6 WKV scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan_p
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk=64, interpret=True):
+    """RWKV6 recurrence; interpret=True for CPU validation."""
+    return rwkv6_scan_p(r, k, v, w, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the RWKV6 WKV scan (lax.scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r,k,v,w: [B, T, H, hd]; u: [H, hd] -> o: [B, T, H, hd]."""
+    B, T, H, hd = r.shape
+
+    def step(S, inp):
+        ri, ki, vi, wi = inp                         # [B, H, hd]
+        kv = ki[..., :, None] * vi[..., None, :]     # [B, H, hd, hd]
+        o = jnp.einsum("bhk,bhkv->bhv", ri, S + u[..., :, None] * kv)
+        S = wi[..., :, None] * S + kv
+        return S, o
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    args = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                 for t in (r, k, v, w))
+    _, o = jax.lax.scan(step, S0, args)
+    return jnp.moveaxis(o, 0, 1).astype(r.dtype)

@@ -1,0 +1,77 @@
+"""RWKV6 WKV recurrence (TPU Pallas) -- the Finch data-dependent-decay
+linear-attention scan:
+
+    o_t = r_t (S + u * k_t v_t^T)
+    S  <- diag(w_t) S + k_t v_t^T
+
+Grid: (B, H, T/chunk); the chunk dim iterates fastest so the [hd, hd]
+state matrix lives in VMEM scratch across chunk steps -- the HBM
+traffic is O(T*hd) for r/k/v/w plus a single state residency, never
+O(T*hd^2). Within a chunk the recurrence is a fori_loop of rank-1
+updates; on TPU these map to VPU ops with the r_t (S ...) contraction
+hitting the MXU per step. A chunk-parallel formulation (materializing
+per-chunk decay products) would trade VMEM for parallelism; we keep the
+sequential-in-chunk form, which is exact, and note the trade in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)      # [chunk, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :].astype(jnp.float32)            # [hd]
+
+    def step(i, carry):
+        S, out = carry
+        ri = jax.lax.dynamic_slice_in_dim(r, i, 1, 0)       # [1, hd]
+        ki = jax.lax.dynamic_slice_in_dim(k, i, 1, 0)
+        vi = jax.lax.dynamic_slice_in_dim(v, i, 1, 0)
+        wi = jax.lax.dynamic_slice_in_dim(w, i, 1, 0)
+        kv = ki.T @ vi                                       # [hd, hd]
+        oi = ri @ (S + u[:, None] * kv)                      # [1, hd]
+        S = wi.T * S + kv
+        out = jax.lax.dynamic_update_slice_in_dim(out, oi, i, 0)
+        return S, out
+
+    S0 = s_ref[...]
+    out0 = jnp.zeros((chunk, r.shape[1]), jnp.float32)
+    S_fin, out = jax.lax.fori_loop(0, chunk, step, (S0, out0))
+    s_ref[...] = S_fin
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def rwkv6_scan_p(r, k, v, w, u, *, chunk=64, interpret=False):
+    """r,k,v,w: [B, T, H, hd]; u: [H, hd]. w is the per-step decay in
+    (0,1). Returns o: [B, T, H, hd] (fp32 accumulated)."""
+    B, T, H, hd = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    grid = (B, H, T // chunk)
+    spec = pl.BlockSpec((1, chunk, 1, hd), lambda b, h, t: (b, t, h, 0))
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, hd), lambda b, h, t: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, hd), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

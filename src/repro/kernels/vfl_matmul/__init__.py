@@ -1,0 +1,2 @@
+from repro.kernels.vfl_matmul.ops import vfl_matmul  # noqa: F401
+from repro.kernels.vfl_matmul.ref import vfl_matmul_ref  # noqa: F401

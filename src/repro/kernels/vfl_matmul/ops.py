@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the VFL block-sparse matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.vfl_matmul.vfl_matmul import vfl_matmul_p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("offset", "bm", "bn", "bk", "interpret"))
+def vfl_matmul(x_local, w_full, offset: int, *, bm=128, bn=128, bk=128,
+               interpret=True):
+    """y = zeropad(x_local) @ w_full without materializing the padding.
+
+    interpret defaults to True because this container is CPU-only; on
+    TPU pass interpret=False to run the compiled kernel.
+    """
+    return vfl_matmul_p(x_local, w_full, offset, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)

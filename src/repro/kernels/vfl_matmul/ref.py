@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the VFL block-sparse matmul: materialize the
+zero-padding exactly as the paper does and use a dense matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def vfl_matmul_ref(x_local, w_full, offset: int):
+    """zeropad(x_local) @ w_full, the literal Algorithm-1 computation."""
+    M, K_local = x_local.shape
+    K_full, _ = w_full.shape
+    x_pad = jnp.zeros((M, K_full), x_local.dtype)
+    x_pad = x_pad.at[:, offset:offset + K_local].set(x_local)
+    return x_pad @ w_full

@@ -1,0 +1,73 @@
+"""Block-sparse VFL input matmul -- the TPU-native form of De-VertiFL's
+zero-padding (DESIGN.md section 2).
+
+The paper's client multiplies a zero-padded full-width input x' by the
+first-layer weight W: y = zeropad(x_local) @ W. All rows of W outside
+the client's feature slice meet zeros; a dense matmul wastes
+(n_clients-1)/n_clients of the MXU work. This kernel computes
+y = x_local @ W[offset:offset+F_local] by *indexing* the weight blocks
+through the BlockSpec index_map -- the padding is never materialized
+and no zero-block is ever loaded into VMEM.
+
+Grid: (M/bm, N/bn, K_local/bk); the K grid walks only the client's
+feature blocks; index_map offsets the W block row by the client's slice
+start. Accumulation in fp32 VMEM scratch, written out on the last K
+step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _out():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def vfl_matmul_p(x_local, w_full, offset: int, *, bm=128, bn=128, bk=128,
+                 interpret=False):
+    """x_local: [M, K_local] (client's features, contiguous slice);
+    w_full: [K_full, N]; offset: slice start (static, multiple of bk).
+    Returns zeropad(x_local) @ w_full == x_local @ w_full[offset:...]."""
+    M, K_local = x_local.shape
+    K_full, N = w_full.shape
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K_local)
+    assert offset % bk == 0 and K_local % bk == 0, \
+        "client slice must be block-aligned"
+    assert offset + K_local <= K_full
+    n_k = K_local // bk
+    off_blocks = offset // bk
+
+    grid = (pl.cdiv(M, bm), pl.cdiv(N, bn), n_k)
+    kernel = functools.partial(_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            # the block-sparse trick: W's K-block index is offset by the
+            # client's slice start -- zero blocks are never touched
+            pl.BlockSpec((bk, bn), lambda i, j, k: (off_blocks + k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x_local.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_local, w_full)

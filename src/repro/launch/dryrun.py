@@ -1,0 +1,269 @@
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers AND compiles for the production meshes, and harvest
+the roofline terms from the compiled artifact.
+
+MUST set the placeholder device count before ANY other import -- jax
+locks the device count on first init.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import sharding as sh                        # noqa: E402
+from repro.configs import INPUT_SHAPES, get_config      # noqa: E402
+from repro.launch import specs as SP                    # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.serve import make_serve_step, shardings_for_serve  # noqa: E402
+from repro.launch.train import (                        # noqa: E402
+    make_train_step, shardings_for_train)
+from repro.models import build_model                    # noqa: E402
+from repro.optim import adam                            # noqa: E402
+from repro.roofline import (                            # noqa: E402
+    collective_bytes_from_hlo, roofline_terms, summarize)
+from repro.roofline.hlo_costs import analyze as hlo_analyze  # noqa: E402
+
+ARCHS = [
+    "qwen2-7b", "rwkv6-1.6b", "jamba-v0.1-52b", "deepseek-moe-16b",
+    "llava-next-34b", "qwen1.5-0.5b", "mixtral-8x22b", "qwen1.5-4b",
+    "gemma2-2b", "seamless-m4t-medium",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def skip_reason(cfg, shape_name):
+    s = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic_decode:
+        return ("pure full-attention arch: long_500k requires "
+                "sub-quadratic attention (DESIGN.md section 4)")
+    if shape_name == "long_500k" and cfg.is_encoder_decoder:
+        return ("enc-dec speech model: 500k-token text decode out of "
+                "family scope (DESIGN.md section 4)")
+    return None
+
+
+def model_step_flops(cfg, shape_name):
+    """MODEL_FLOPS: 6*N_active*tokens for training, 2*N_active*tokens
+    for inference (global, not per-chip)."""
+    s = INPUT_SHAPES[shape_name]
+    n_active = cfg.param_counts()["active"]
+    if s.kind == "train":
+        return 6 * n_active * s.global_batch * s.seq_len
+    if s.kind == "prefill":
+        return 2 * n_active * s.global_batch * s.seq_len
+    return 2 * n_active * s.global_batch  # decode: one token per seq
+
+
+RULE_SETS = {
+    "default": None,
+    # beyond-paper perf variants (EXPERIMENTS.md section Perf):
+    "ep": "EP_RULES",            # expert-parallel MoE over the model axis
+    "no_fsdp": "NO_FSDP",        # replicate params (small models)
+    "federated": "FEDERATED_RULES",
+}
+
+
+def resolve_rules(name):
+    if name in (None, "default"):
+        return None
+    if name == "ep":
+        return sh.EP_RULES
+    if name == "federated":
+        return sh.FEDERATED_RULES
+    if name == "no_fsdp":
+        return sh.DEFAULT_RULES.with_overrides(embed=None)
+    raise KeyError(name)
+
+
+def run_one(arch, shape_name, multi_pod=False, exchange=None,
+            rules=None, lr=1e-4, cfg_overrides=None):
+    """Lower + compile one (arch, shape, mesh); returns a record dict."""
+    t0 = time.time()
+    cfg = get_config(arch)
+    if exchange:
+        cfg = cfg.replace(vfl=cfg.vfl.__class__(enabled=True,
+                                                exchange=exchange))
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    s = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "exchange": cfg.vfl.exchange if cfg.vfl.enabled else "off",
+        "kind": s.kind,
+    }
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        record["status"] = "skipped"
+        record["reason"] = reason
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    with sh.use_context(mesh, rules):
+        model = build_model(cfg)
+        if s.kind == "prefill":
+            # forward-only: logits + populated decode caches
+            batch = SP.train_batch_spec(cfg, shape_name)
+            batch.pop("labels")
+            params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            pspecs = sh.param_specs(params_shape)
+            bspecs = sh.batch_specs(batch)
+            if cfg.is_encoder_decoder and "prefix_emb" in bspecs:
+                bspecs["prefix_emb"] = sh.logical_spec("batch", None, None)
+            import functools as _ft
+            ns = _ft.partial(sh.named_sharding_tree, mesh=mesh)
+            jitted = jax.jit(model.prefill,
+                             in_shardings=(ns(pspecs), ns(bspecs)))
+            lowered = jitted.lower(params_shape, batch)
+        elif s.kind == "train":
+            opt = adam(lr)
+            batch = SP.train_batch_spec(cfg, shape_name)
+            (ps, os_, _, bs), params_shape, opt_shape = \
+                shardings_for_train(model, opt, batch, mesh)
+            step_fn = make_train_step(model, opt)
+            jitted = jax.jit(step_fn, in_shardings=(ps, os_, None, bs),
+                             donate_argnums=(0, 1))
+            step0 = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jitted.lower(params_shape, opt_shape, step0, batch)
+        else:
+            serve_fn = make_serve_step(model)
+            (ps, ss, ts), params_shape, state_shape = shardings_for_serve(
+                model, s.global_batch, s.seq_len, mesh)
+            jitted = jax.jit(serve_fn, in_shardings=(ps, ss, ts),
+                             donate_argnums=(1,))
+            tokens = jax.ShapeDtypeStruct((s.global_batch, 1), jnp.int32)
+            lowered = jitted.lower(params_shape, state_shape, tokens)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception:
+            mem_info = {}
+
+        hlo = compiled.as_text()
+        # loop-aware costs (cost_analysis counts while bodies once --
+        # see repro/roofline/hlo_costs.py); raw values kept as
+        # cross-checks below
+        la = hlo_analyze(hlo)
+        coll = la["collective_wire_bytes"]
+        flops = la["flops"]
+        bytes_acc = la["hbm_bytes"]
+        mf = model_step_flops(cfg, shape_name) / n_chips
+        rl = roofline_terms(flops, bytes_acc, coll.get("total", 0.0),
+                            model_flops_per_chip=mf)
+        xla_raw = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collectives_unrolled_once": collective_bytes_from_hlo(hlo),
+        }
+
+        n_params = cfg.param_counts()
+        record.update({
+            "status": "ok",
+            "n_chips": n_chips,
+            "per_chip_flops": flops,
+            "per_chip_bytes": bytes_acc,
+            "collective_wire_bytes": coll,
+            "memory_analysis": mem_info,
+            "xla_cost_analysis_raw": xla_raw,
+            "roofline": rl,
+            "params_total": n_params["total"],
+            "params_active": n_params["active"],
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+        })
+    return record
+
+
+def result_path(record, out_dir):
+    ex = record.get("exchange", "off")
+    return os.path.join(
+        out_dir, f"{record['arch']}__{record['shape']}__"
+                 f"{record['mesh']}__{ex}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--exchange", default=None,
+                    choices=[None, "zeropad_psum", "allgather"])
+    ap.add_argument("--rules", default="default",
+                    choices=list(RULE_SETS))
+    ap.add_argument("--remat-policy", default=None,
+                    choices=[None, "save_mixer_ffn"])
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    rule_set = resolve_rules(args.rules)
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = SHAPES if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                probe = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "exchange": args.exchange or "zeropad_psum"}
+                path = result_path(probe, args.out)
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        rec = json.load(f)
+                    status = rec.get("status")
+                    print(f"[cached] {arch} {shape} {probe['mesh']}: "
+                          f"{status}")
+                    continue
+                try:
+                    ov = ({"remat_policy": args.remat_policy}
+                          if args.remat_policy else None)
+                    rec = run_one(arch, shape, multi_pod=mp,
+                                  exchange=args.exchange, rules=rule_set,
+                                  cfg_overrides=ov)
+                    if rec["status"] == "ok":
+                        print(f"[ok {rec['compile_s']:.0f}s] "
+                              + summarize(rec))
+                    else:
+                        print(f"[skip] {arch} {shape} {probe['mesh']}: "
+                              f"{rec['reason']}")
+                except Exception as e:
+                    failures += 1
+                    rec = dict(probe)
+                    rec["status"] = "error"
+                    rec["error"] = f"{type(e).__name__}: {e}"
+                    rec["traceback"] = traceback.format_exc()[-4000:]
+                    print(f"[FAIL] {arch} {shape} {probe['mesh']}: "
+                          f"{rec['error']}")
+                with open(result_path(rec, args.out), "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Federated-mode dry-run: lower the De-VertiFL production protocol at
+pod scale -- each pod is a super-client with its own weight replica;
+local steps touch no cross-pod collective; every `fedavg_every` steps
+the replicas are FedAvg'ed (Algorithm 1 lines 16-19 on the DCI links).
+
+Records two lowerings per arch on the (pod=2, data=16, model=16) mesh:
+  standard   -- synchronous data-parallel across pods (every step pays
+                the cross-pod gradient all-reduce)
+  federated  -- local steps + conditional FedAvg (pmean over pod)
+
+and reports the cross-pod wire bytes of each, i.e. the measured DCI
+saving of the paper's protocol.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_federated --arch qwen1.5-0.5b
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import sharding as sh                        # noqa: E402
+from repro.configs import INPUT_SHAPES, get_config      # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.train import (                        # noqa: E402
+    make_federated_train_step, make_train_step, shardings_for_train)
+from repro.models import build_model                    # noqa: E402
+from repro.optim import adam                            # noqa: E402
+from repro.roofline.hlo_costs import analyze            # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__),
+                       "../../../benchmarks/results/federated")
+
+
+def crosspod_bytes(hlo_text):
+    """Collective wire bytes whose replica groups span pods (group size
+    > 256 on the 512-chip mesh means the op crosses the DCI)."""
+    import re
+    from repro.roofline.hlo_costs import (_collective_wire,
+                                          split_computations, _CALLS_RE,
+                                          _TRIP_RE, _TRIP_RE2,
+                                          _BRANCHES_RE)
+    comps, entry = split_computations(hlo_text)
+    from collections import defaultdict
+    local_calls = {}
+    for cname, comp in comps.items():
+        calls = []
+        for ins in comp.instrs:
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                for br in bm.group(1).split(","):
+                    calls.append((br.strip().lstrip("%"), 1.0))
+            for callee in _CALLS_RE.findall(ins.line):
+                mult = 1.0
+                if ins.op == "while":
+                    tm = _TRIP_RE.search(ins.line) or \
+                        _TRIP_RE2.search(ins.line)
+                    mult = float(tm.group(1)) if tm else 1.0
+                    if f"condition=%{callee}" in ins.line or \
+                            f"condition={callee}" in ins.line:
+                        continue
+                calls.append((callee, mult))
+        local_calls[cname] = calls
+    mult = defaultdict(float)
+
+    def visit(c, m):
+        mult[c] += m
+        for callee, cm in local_calls.get(c, []):
+            if callee in comps:
+                visit(callee, m * cm)
+    visit(entry, 1.0)
+
+    import numpy as np
+
+    def spans_pods(line, pod_stride=256):
+        """Materialize iota-format replica groups and check whether any
+        group mixes devices from different pods (ids differing across
+        the pod_stride boundary)."""
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                      r"(?:T\(([\d,]+)\))?", line)
+        if m:
+            ng, gs = int(m.group(1)), int(m.group(2))
+            dims = [int(d) for d in m.group(3).split(",")]
+            ids = np.arange(int(np.prod(dims))).reshape(dims)
+            if m.group(4):
+                perm = [int(p) for p in m.group(4).split(",")]
+                ids = ids.transpose(perm)
+            groups = ids.reshape(ng, gs)
+            pods = groups // pod_stride
+            return bool((pods.min(axis=1) != pods.max(axis=1)).any())
+        m = re.search(r"replica_groups=\{\{([^=]*?)\}\}", line)
+        if m:
+            for grp in m.group(1).split("},{"):
+                ids = [int(x) for x in grp.replace("{", "").replace(
+                    "}", "").split(",") if x.strip()]
+                if ids and min(ids) // pod_stride != max(ids) // pod_stride:
+                    return True
+        return False
+
+    total = 0.0
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            cw = _collective_wire(ins)
+            if not cw or cw[1] <= 0:
+                continue
+            if spans_pods(ins.line):
+                total += cw[1] * mult[cname]
+    return total
+
+
+def run(arch, fedavg_every=50):
+    cfg = get_config(arch)
+    s = INPUT_SHAPES["train_4k"]
+    mesh = make_production_mesh(multi_pod=True)
+    n_pods = 2
+    out = {"arch": arch, "fedavg_every": fedavg_every}
+
+    with sh.use_context(mesh, sh.FEDERATED_RULES):
+        model = build_model(cfg)
+        opt = adam(1e-4)
+
+        # ---- standard synchronous step (cross-pod grad all-reduce) ----
+        batch = {"tokens": jax.ShapeDtypeStruct((s.global_batch,
+                                                 s.seq_len), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((s.global_batch,
+                                                 s.seq_len), jnp.int32)}
+        with sh.use_context(mesh, sh.DEFAULT_RULES):
+            (ps, os_, _, bs), pshape, oshape = shardings_for_train(
+                model, opt, batch, mesh)
+            fn = jax.jit(make_train_step(model, opt),
+                         in_shardings=(ps, os_, None, bs),
+                         donate_argnums=(0, 1))
+            txt = fn.lower(pshape, oshape,
+                           jax.ShapeDtypeStruct((), jnp.int32),
+                           batch).compile().as_text()
+        la = analyze(txt)
+        out["standard"] = {
+            "collective_total_GB": la["collective_wire_bytes"]["total"]/1e9,
+            "crosspod_GB": crosspod_bytes(txt) / 1e9,
+        }
+
+        # ---- federated step (local steps + conditional pod FedAvg) ----
+        params_shape = jax.eval_shape(
+            lambda k: jax.vmap(model.init)(jax.random.split(k, n_pods)),
+            jax.random.PRNGKey(0))
+        inner = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        ispecs = sh.param_specs(inner)
+        pspecs = jax.tree.map(lambda sp: P(*(("pod",) + tuple(sp))),
+                              ispecs, is_leaf=lambda x: isinstance(x, P))
+        opt_shape = jax.eval_shape(
+            lambda p: jax.vmap(opt.init)(p), params_shape)
+        oispecs = sh.param_specs(jax.eval_shape(opt.init, inner))
+        ospecs = jax.tree.map(lambda sp: P(*(("pod",) + tuple(sp))),
+                              oispecs, is_leaf=lambda x: isinstance(x, P))
+        batch_f = {"tokens": jax.ShapeDtypeStruct(
+                       (n_pods, s.global_batch // n_pods, s.seq_len),
+                       jnp.int32),
+                   "labels": jax.ShapeDtypeStruct(
+                       (n_pods, s.global_batch // n_pods, s.seq_len),
+                       jnp.int32)}
+        bspec = P("pod", "data", None)
+        ns = lambda t: jax.tree.map(  # noqa: E731
+            lambda sp: NamedSharding(mesh, sp), t,
+            is_leaf=lambda x: isinstance(x, P))
+        step_fn = make_federated_train_step(model, opt, n_pods,
+                                            fedavg_every)
+        fed = jax.jit(step_fn,
+                      in_shardings=(ns(pspecs), ns(ospecs), None,
+                                    {k: NamedSharding(mesh, bspec)
+                                     for k in batch_f}),
+                      donate_argnums=(0, 1))
+        txt_f = fed.lower(params_shape, opt_shape,
+                          jax.ShapeDtypeStruct((), jnp.int32),
+                          batch_f).compile().as_text()
+        la_f = analyze(txt_f)
+        sync_crosspod = crosspod_bytes(txt_f)
+        out["federated"] = {
+            "collective_total_GB":
+                la_f["collective_wire_bytes"]["total"] / 1e9,
+            "crosspod_sync_GB": sync_crosspod / 1e9,
+            # the sync branch runs every fedavg_every steps
+            "crosspod_amortized_GB_per_step":
+                sync_crosspod / 1e9 / fedavg_every,
+        }
+        std = out["standard"]["crosspod_GB"]
+        amort = out["federated"]["crosspod_amortized_GB_per_step"]
+        out["dci_reduction"] = (std / amort) if amort else float("inf")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--fedavg-every", type=int, default=50)
+    args = ap.parse_args()
+    rec = run(args.arch, args.fedavg_every)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{args.arch}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x input
+shape): weak-type-correct, shardable, no device allocation. The dry-run
+lowers against these; train.py/serve.py use the same builders for real
+arrays so shapes can never diverge between dry-run and execution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_spec(cfg, shape_name):
+    """Inputs for one train/prefill step.
+
+    vlm: seq = prefix image tokens + text tokens (anyres tiling);
+    audio: decoder sees seq_len text tokens, encoder num_prefix frames.
+    """
+    s = INPUT_SHAPES[shape_name]
+    B, S = s.global_batch, s.seq_len
+    batch = {}
+    if cfg.modality == "vision_text":
+        P = min(cfg.num_prefix_embeddings, S // 2)
+        batch["prefix_emb"] = sds((B, P, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((B, S - P), jnp.int32)
+        batch["labels"] = sds((B, S - P), jnp.int32)
+    elif cfg.modality == "audio_text":
+        batch["prefix_emb"] = sds((B, cfg.num_prefix_embeddings,
+                                   cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+    return batch
+
+
+def decode_batch_spec(cfg, shape_name):
+    s = INPUT_SHAPES[shape_name]
+    return {"tokens": sds((s.global_batch, 1), jnp.int32)}
+
+
+def input_specs(cfg, shape_name):
+    s = INPUT_SHAPES[shape_name]
+    if s.kind == "decode":
+        return decode_batch_spec(cfg, shape_name)
+    return train_batch_spec(cfg, shape_name)
+
+
+def concretize(spec_tree, seed=0):
+    """Turn ShapeDtypeStructs into real arrays (for smoke runs)."""
+    key = jax.random.PRNGKey(seed)
+
+    def one(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(one, spec_tree)

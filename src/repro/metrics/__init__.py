@@ -1,0 +1,1 @@
+from repro.metrics.classification import accuracy, f1_score  # noqa: F401

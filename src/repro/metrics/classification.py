@@ -1,0 +1,32 @@
+"""Accuracy and F1 (the paper's evaluation metrics), numpy-only.
+
+F1 is macro-averaged for multi-class (MNIST/FMNIST) and the positive
+-class F1 for binary tasks when average='binary', matching sklearn's
+conventions used by the paper's reference implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def accuracy(y_true, y_pred) -> float:
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    return float((y_true == y_pred).mean())
+
+
+def f1_score(y_true, y_pred, average="macro") -> float:
+    y_true = np.asarray(y_true)
+    y_pred = np.asarray(y_pred)
+    classes = np.unique(np.concatenate([y_true, y_pred]))
+    if average == "binary":
+        classes = np.array([1])
+    f1s = []
+    for c in classes:
+        tp = np.sum((y_pred == c) & (y_true == c))
+        fp = np.sum((y_pred == c) & (y_true != c))
+        fn = np.sum((y_pred != c) & (y_true == c))
+        prec = tp / (tp + fp) if tp + fp else 0.0
+        rec = tp / (tp + fn) if tp + fn else 0.0
+        f1s.append(2 * prec * rec / (prec + rec) if prec + rec else 0.0)
+    return float(np.mean(f1s))

@@ -1,0 +1,229 @@
+"""Attention: GQA/MHA with RoPE, QKV bias, logit softcap, full / sliding
+-window / local+global variants, bidirectional (encoder) and cross
+attention, chunked-query prefill (flash-style memory behaviour in pure
+XLA) and ring-buffer KV caches for windowed decode.
+
+The Pallas flash kernel in repro.kernels.flash_attention implements the
+same math for the TPU hot path; this module is the XLA reference path
+used for dry-run lowering and CPU execution (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
+
+
+def attn_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    H, KV, hd, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": L.dense_init(ks[0], D, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": L.dense_init(ks[1], D, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wv": L.dense_init(ks[2], D, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wo": L.dense_init(ks[3], H * hd, D, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _attend(q, k, v, qpos, kpos, *, causal, window, cap, scale):
+    """q: [B,Q,H,hd]; k,v: [B,S,KV,hd]; qpos: [Q] or [B,Q]; kpos: [S] or [B,S].
+    kpos < 0 marks invalid (unwritten ring slots / padding)."""
+    B, Q, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qr = q.reshape(B, Q, KV, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = L.softcap(scores, cap)
+    # keep positions 1-D when batch-invariant (train/prefill): the mask
+    # stays [1,1,1,Q,S] instead of [B,1,1,Q,S] -- a B x smaller tensor
+    # that XLA would otherwise materialize and carry through the layer
+    # scan (EXPERIMENTS.md section Perf, iteration 1)
+    if qpos.ndim == 1:
+        qpos = qpos[None]               # [1, Q]
+    if kpos.ndim == 1:
+        kpos = kpos[None]               # [1, S]
+    qp = qpos[:, None, None, :, None]   # [B|1,1,1,Q,1]
+    kp = kpos[:, None, None, None, :]   # [B|1,1,1,1,S]
+    mask = kp >= 0
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (qp - kp < window)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(B, Q, H, hd)
+
+
+def _chunked_attend(q, k, v, qpos, kpos, *, causal, window, cap, scale,
+                    q_chunk):
+    """Scan over query chunks so the [Q,S] score tensor never fully
+    materializes. For windowed attention only the [chunk-window, chunk)
+    key band is touched -> O(S*window) FLOPs instead of O(S^2)."""
+    B, S, H, hd = q.shape
+    n_chunks = S // q_chunk
+    assert S % q_chunk == 0
+
+    if window and causal:
+        # pad keys on the left so every chunk reads a static-size band
+        pad = ((0, 0), (window, 0), (0, 0), (0, 0))
+        k_p = jnp.pad(k, pad)
+        v_p = jnp.pad(v, pad)
+        kpos_p = jnp.pad(kpos, (window, 0), constant_values=-1)
+
+        def body(_, i):
+            start = i * q_chunk
+            qc = jax.lax.dynamic_slice_in_dim(q, start, q_chunk, axis=1)
+            kc = jax.lax.dynamic_slice_in_dim(k_p, start, window + q_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(v_p, start, window + q_chunk, 1)
+            kpc = jax.lax.dynamic_slice_in_dim(kpos_p, start,
+                                               window + q_chunk, 0)
+            qpc = jax.lax.dynamic_slice_in_dim(qpos, start, q_chunk, 0)
+            return None, _attend(qc, kc, vc, qpc, kpc, causal=True,
+                                 window=window, cap=cap, scale=scale)
+    else:
+        def body(_, i):
+            start = i * q_chunk
+            qc = jax.lax.dynamic_slice_in_dim(q, start, q_chunk, axis=1)
+            qpc = jax.lax.dynamic_slice_in_dim(qpos, start, q_chunk, 0)
+            return None, _attend(qc, k, v, qpc, kpos, causal=causal,
+                                 window=window, cap=cap, scale=scale)
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # chunks: [n_chunks, B, q_chunk, H, hd]
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, hd)
+    return out
+
+
+def attn_apply(params, x, positions, cfg, *, layer_window=None, causal=True,
+               kv_override=None, return_kv=False):
+    """Full-sequence (train / prefill) attention.
+
+    layer_window: None -> cfg-level behaviour; int -> sliding window.
+    kv_override: (k_src,) tensor for cross-attention (keys/values computed
+        from encoder output instead of x).
+    return_kv: also return (k, v) post-rope for prefill cache population.
+    """
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B, S, _ = x.shape
+    kv_src = x if kv_override is None else kv_override
+    q = _split_heads(L.dense(params["wq"], x), H, hd)
+    k = _split_heads(L.dense(params["wk"], kv_src), KV, hd)
+    v = _split_heads(L.dense(params["wv"], kv_src), KV, hd)
+    if kv_override is None:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kpos = positions
+    else:
+        kpos = jnp.arange(kv_src.shape[1])
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    scale = hd ** -0.5
+    window = layer_window
+    Skv = kv_src.shape[1]
+    q_chunk = _pick_chunk(S, Skv, window if causal else None)
+    if q_chunk < S:
+        out = _chunked_attend(q, k, v, positions, kpos, causal=causal,
+                              window=window, cap=cfg.attn_logit_softcap,
+                              scale=scale, q_chunk=q_chunk)
+    else:
+        out = _attend(q, k, v, positions, kpos, causal=causal, window=window,
+                      cap=cfg.attn_logit_softcap, scale=scale)
+    out = constrain(out, "batch", None, "heads", None)
+    out = L.dense(params["wo"], out.reshape(B, S, H * hd))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def fill_cache_from_prefill(cache, k, v, positions, batch_size):
+    """Scatter a full-sequence prefill's (k, v) into a (possibly ring)
+    cache. positions: [S] absolute; ring slot = pos % size; only the
+    last `size` positions survive (exactly what decode would have
+    written)."""
+    size = cache["k"].shape[1]
+    S = k.shape[1]
+    take = min(S, size)
+    k_t = k[:, S - take:]
+    v_t = v[:, S - take:]
+    pos_t = positions[S - take:]
+    slots = pos_t % size
+    new_k = cache["k"].at[:, slots].set(k_t)
+    new_v = cache["v"].at[:, slots].set(v_t)
+    new_pos = cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(pos_t[None], (batch_size, take)))
+    new_k = constrain(new_k, "batch", "kv_seq", "heads", None)
+    new_v = constrain(new_v, "batch", "kv_seq", "heads", None)
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def _pick_chunk(S, Skv, window):
+    """Choose a query-chunk so the score tensor stays ~O(chunk * band)."""
+    if S <= 4096 and Skv <= 4096:
+        return S
+    for c in (1024, 512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache (ring buffer for windowed layers)
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch, seq_len, layer_window, dtype):
+    size = min(seq_len, layer_window) if layer_window else seq_len
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, KV, hd), dtype=dtype),
+        "v": jnp.zeros((batch, size, KV, hd), dtype=dtype),
+        "pos": jnp.full((batch, size), -1, dtype=jnp.int32),
+    }
+
+
+def attn_decode(params, x, position, cache, cfg, *, layer_window=None):
+    """One-token decode. x: [B,1,D]; position: [B] int32 (absolute);
+    cache: dict with ring-buffer k/v/pos. Returns (out, new_cache)."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    B = x.shape[0]
+    q = _split_heads(L.dense(params["wq"], x), H, hd)
+    k = _split_heads(L.dense(params["wk"], x), KV, hd)
+    v = _split_heads(L.dense(params["wv"], x), KV, hd)
+    q = L.apply_rope(q, position[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, position[:, None], cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = position % size                              # [B]
+    b = jnp.arange(B)
+    new_k = cache["k"].at[b, slot].set(k[:, 0])
+    new_v = cache["v"].at[b, slot].set(v[:, 0])
+    new_pos = cache["pos"].at[b, slot].set(position)
+    new_k = constrain(new_k, "batch", "kv_seq", "heads", None)
+    new_v = constrain(new_v, "batch", "kv_seq", "heads", None)
+
+    out = _attend(q, new_k, new_v, position[:, None], new_pos,
+                  causal=True, window=layer_window,
+                  cap=cfg.attn_logit_softcap, scale=hd ** -0.5)
+    out = L.dense(params["wo"], out.reshape(B, 1, H * hd))
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def layer_window_for(cfg, layer_idx):
+    """Resolve the attention window for a given layer index."""
+    if cfg.attn_type == "swa":
+        return cfg.window_size
+    if cfg.attn_type == "local_global":
+        # even layers local (windowed), odd layers global -- gemma2 style
+        return cfg.window_size if layer_idx % 2 == 0 else None
+    return None

@@ -1,0 +1,118 @@
+"""Primitive layers as pure functions over dict params.
+
+Params are plain nested dicts of jnp arrays so the whole model state is
+a pytree that pjit/shard_map/checkpointing handle natively. Init
+functions take explicit PRNG keys; apply functions are side-effect free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim, out_dim, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    k = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
+    p = {"kernel": k.astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((out_dim,), dtype=dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["kernel"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y
+
+
+def embedding_init(key, vocab, dim, dtype):
+    t = jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * (dim ** -0.5)
+    return {"table": t.astype(dtype)}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def norm_init(dim, kind="rmsnorm"):
+    p = {"scale": jnp.ones((dim,), dtype=jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype=jnp.float32)
+    return p
+
+
+def apply_norm(params, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]              # [...,S,1,hd/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, act, dtype, prefix_bias=False):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+            "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype, bias=prefix_bias),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype, bias=prefix_bias),
+    }
+
+
+def mlp_apply(params, x, act):
+    if act == "swiglu":
+        h = jax.nn.silu(dense(params["w_gate"], x)) * dense(params["w_up"], x)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(params["wi"], x), approximate=True)
+    else:
+        h = jax.nn.relu(dense(params["wi"], x))
+    h = constrain(h, "batch", None, "mlp")
+    return dense(params["w_down"], h)

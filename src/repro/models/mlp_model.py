@@ -1,0 +1,55 @@
+"""The paper's own model: an MLP with 3 hidden layers (10 neurons each)
+and an output head, exactly as in De-VertiFL section IV. The De-VertiFL
+protocol in repro.core drives this model; the zero-padding / active-node
+semantics live in the protocol, not here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+class PaperMLP:
+    def __init__(self, cfg):
+        from repro.configs import paper_mlp as pm
+        self.cfg = cfg
+        self.in_features = cfg.vocab_size
+        self.hidden = cfg.d_model
+        self.n_hidden = cfg.num_layers
+        self.n_classes = pm.N_CLASSES.get(cfg.name, 10)
+        self.dtype = jnp.float32
+
+    def init(self, key):
+        dims = ([self.in_features] + [self.hidden] * self.n_hidden
+                + [self.n_classes])
+        ks = jax.random.split(key, len(dims) - 1)
+        return {f"layer_{i}": L.dense_init(ks[i], dims[i], dims[i + 1],
+                                           jnp.float32, bias=True,
+                                           scale=(2.0 / dims[i]) ** 0.5)
+                for i in range(len(dims) - 1)}
+
+    def forward_hidden(self, params, x, upto=None):
+        """Forward through hidden layers; returns pre-head hidden.
+        upto=k stops after hidden layer k (used by the exchange)."""
+        n = self.n_hidden if upto is None else upto
+        h = x
+        for i in range(n):
+            h = jax.nn.relu(L.dense(params[f"layer_{i}"], h))
+        return h
+
+    def head(self, params, h):
+        return L.dense(params[f"layer_{self.n_hidden}"], h)
+
+    def forward_logits(self, params, batch):
+        h = self.forward_hidden(params, batch["x"])
+        return self.head(params, h), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward_logits(params, batch)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        ce = -ll.mean()
+        return ce, {"ce": ce, "aux": jnp.zeros(()), "tokens": 1.0 * ll.size}

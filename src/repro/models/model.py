@@ -1,0 +1,181 @@
+"""Top-level Model: config -> init / loss / decode, for every assigned
+architecture family (dense, moe, ssm, hybrid, vlm, audio) plus the
+paper's own MLPs (which the De-VertiFL core drives directly).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding import constrain
+
+
+def padded_vocab(v: int) -> int:
+    return ((v + 127) // 128) * 128
+
+
+class Model:
+    """Decoder-only or encoder-decoder LM assembled from a ModelConfig."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.dtype = L.dtype_of(cfg.dtype)
+        self.kinds = T.layer_kinds(cfg)
+        self.enc_kinds = T.encoder_kinds(cfg) if cfg.is_encoder_decoder \
+            else []
+        self.vocab = padded_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        emb_key = "vfl_embedding" if cfg.vfl.enabled else "embedding"
+        params = {
+            emb_key: L.embedding_init(ks[0], self.vocab, cfg.d_model,
+                                      self.dtype),
+            "stack": T.stack_init(ks[1], cfg, self.kinds, self.dtype),
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(ks[2], cfg.d_model, self.vocab,
+                                             self.dtype)
+        if cfg.is_encoder_decoder:
+            params["encoder"] = {
+                "stack": T.stack_init(ks[3], cfg, self.enc_kinds, self.dtype),
+                "final_norm": L.norm_init(cfg.d_model, cfg.norm_type),
+            }
+        return params
+
+    # ------------------------------------------------------------------
+    def _encode(self, params, prefix_emb):
+        """Encoder pass (audio family): frame embeddings -> memory."""
+        F = prefix_emb.shape[1]
+        pos = jnp.arange(F)
+        h = prefix_emb.astype(self.dtype)
+        h, _ = T.stack_apply(params["encoder"]["stack"], h, pos, self.cfg,
+                             self.enc_kinds)
+        return L.apply_norm(params["encoder"]["final_norm"], h,
+                            self.cfg.norm_type)
+
+    def forward_logits(self, params, batch):
+        """batch: {'tokens': [B,S_text] (+ 'prefix_emb': [B,P,D])}.
+        Returns logits aligned with tokens positions ([B,S_text,V])."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        enc = None
+        prefix = None
+        if cfg.is_encoder_decoder:
+            enc = self._encode(params, batch["prefix_emb"])
+        elif cfg.modality != "text" and "prefix_emb" in batch:
+            prefix = batch["prefix_emb"]
+
+        h = T.embed_input(params, tokens, cfg, prefix_emb=prefix)
+        h = constrain(h, "batch", None, "act_embed")
+        S_total = h.shape[1]
+        positions = jnp.arange(S_total)
+        h, aux = T.stack_apply(params["stack"], h, positions, cfg,
+                               self.kinds, enc=enc)
+        h = L.apply_norm(params["final_norm"], h, cfg.norm_type)
+        h = h[:, S_total - S_text:, :]
+        logits = T.logits_from_hidden(params, h, cfg)
+        return logits, aux
+
+    def loss(self, params, batch):
+        """Next-token CE. batch needs 'tokens' and 'labels' (same shape);
+        labels < 0 are masked."""
+        logits, aux = self.forward_logits(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lab = jnp.clip(labels, 0)
+        # CE without gathering the (vocab-sharded) logits: logsumexp is
+        # a sharded-safe reduction and the label logit is a one-hot
+        # contraction (psum of a [B,S] result) -- take_along_axis here
+        # would all-gather the full [B,S,V] logits (EXPERIMENTS.md
+        # section Perf iter 5)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        one_hot = jax.nn.one_hot(lab, logits.shape[-1],
+                                 dtype=logits.dtype)
+        label_logit = jnp.einsum("bsv,bsv->bs", logits, one_hot)
+        ll = label_logit - lse
+        ce = -(ll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux,
+                      "tokens": mask.sum()}
+
+    # ------------------------------------------------------------------
+    # prefill (forward-only; returns logits and a populated decode state)
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch, cache_len=None):
+        """batch as in forward_logits. Returns (last-token logits,
+        decode state ready for decode_step at position seq_len)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S_text = tokens.shape
+        enc = None
+        prefix = None
+        if cfg.is_encoder_decoder:
+            enc = self._encode(params, batch["prefix_emb"])
+        elif cfg.modality != "text" and "prefix_emb" in batch:
+            prefix = batch["prefix_emb"]
+        h = T.embed_input(params, tokens, cfg, prefix_emb=prefix)
+        h = constrain(h, "batch", None, "act_embed")
+        S_total = h.shape[1]
+        cache_len = cache_len or S_total
+        positions = jnp.arange(S_total)
+        h, cache = T.stack_prefill(params["stack"], h, positions, cfg,
+                                   self.kinds, B, cache_len, self.dtype,
+                                   enc=enc)
+        h = L.apply_norm(params["final_norm"], h, cfg.norm_type)
+        logits = T.logits_from_hidden(params, h[:, -1:, :], cfg)
+        state = {"cache": cache,
+                 "position": jnp.full((B,), S_total, jnp.int32)}
+        if cfg.is_encoder_decoder:
+            state["enc"] = enc
+        return logits, state
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def init_decode_state(self, batch_size, seq_len, prefill_len=None):
+        cfg = self.cfg
+        state = {
+            "cache": T.stack_init_cache(cfg, self.kinds, batch_size, seq_len,
+                                        self.dtype),
+            "position": jnp.full((batch_size,),
+                                 prefill_len if prefill_len is not None
+                                 else 0, jnp.int32),
+        }
+        if cfg.is_encoder_decoder:
+            state["enc"] = jnp.zeros(
+                (batch_size, cfg.num_prefix_embeddings, cfg.d_model),
+                self.dtype)
+        return state
+
+    def decode_step(self, params, state, tokens):
+        """tokens: [B,1] -> (logits [B,1,V], new_state)."""
+        cfg = self.cfg
+        enc = state.get("enc")
+        h = T.embed_input(params, tokens, cfg)
+        h = constrain(h, "batch", None, "act_embed")
+        pos = state["position"]
+        h, new_cache = T.stack_decode(params["stack"], h, pos, cfg,
+                                      self.kinds, state["cache"], enc=enc)
+        h = L.apply_norm(params["final_norm"], h, cfg.norm_type)
+        logits = T.logits_from_hidden(params, h, cfg)
+        new_state = dict(state)
+        new_state["cache"] = new_cache
+        new_state["position"] = pos + 1
+        return logits, new_state
+
+
+def build_model(cfg) -> Model:
+    if cfg.family == "mlp":
+        from repro.models.mlp_model import PaperMLP
+        return PaperMLP(cfg)
+    return Model(cfg)

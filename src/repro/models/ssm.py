@@ -1,0 +1,297 @@
+"""State-space mixers: Mamba (S6 selective scan, for Jamba) and RWKV6
+"Finch" (data-dependent decay linear attention).
+
+Both are implemented with chunked sequential scans: the sequence is cut
+into chunks; a lax.scan over chunks carries the recurrent state and each
+chunk body is rematerialized, bounding activation memory at
+O(chunk * state) instead of O(seq * state). The Pallas kernel in
+repro.kernels.rwkv6_scan implements the RWKV6 inner recurrence for TPU;
+this module is the XLA/CPU path and oracle.
+
+Decode paths carry explicit recurrent state pytrees (the SSM analogue of
+a KV cache) -- this is what makes long_500k O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import constrain
+
+
+def _chunk_count(S):
+    for c in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if S % c == 0:
+            return S // c
+    return 1
+
+
+# ===========================================================================
+# Mamba (S6)
+# ===========================================================================
+def mamba_init(key, cfg, dtype):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state_dim
+    dt_rank = max(1, D // 16)
+    ks = jax.random.split(key, 6)
+    s = D ** -0.5
+    p = {"mamba": {
+        "in_proj": (jax.random.normal(ks[0], (D, 2 * d_in), jnp.float32)
+                    * s).astype(dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm_conv_width, d_in),
+                                   jnp.float32) * 0.1).astype(dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_in, dt_rank + 2 * N),
+                                     jnp.float32) * d_in ** -0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_in), jnp.float32)
+                    * dt_rank ** -0.5).astype(dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_in, N)).copy()),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_in, D), jnp.float32)
+                     * d_in ** -0.5).astype(dtype),
+    }}
+    return p
+
+
+def _mamba_scan_chunk(h0, a, bx, c):
+    """h0: [B, d_in, N]; a, bx: [B, Tc, d_in, N]; c: [B, Tc, N].
+    Sequential within-chunk scan (chunk is small)."""
+    def step(h, inp):
+        ai, bxi, ci = inp
+        h = ai * h + bxi
+        y = jnp.einsum("bdn,bn->bd", h, ci)
+        return h, y
+    a_t = jnp.moveaxis(a, 1, 0)
+    bx_t = jnp.moveaxis(bx, 1, 0)
+    c_t = jnp.moveaxis(c, 1, 0)
+    h, ys = jax.lax.scan(step, h0, (a_t, bx_t, c_t))
+    return h, jnp.moveaxis(ys, 0, 1)   # [B, Tc, d_in]
+
+
+def mamba_apply(params, x, cfg, *, return_state=False, init_state=None):
+    """x: [B, S, D]. Full-sequence (train/prefill) path."""
+    m = params["mamba"]
+    B, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    N = cfg.ssm_state_dim
+    dt_rank = max(1, D // 16)
+
+    xz = x @ m["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = constrain(x_in, "batch", None, "ssm_inner")
+    # causal depthwise conv
+    w = m["conv"]                                     # [K, d_in]
+    K = w.shape[0]
+    xp = jnp.pad(x_in, ((0, 0), (K - 1, 0), (0, 0)))
+    x_conv = sum(xp[:, i:i + S, :] * w[i] for i in range(K))
+    x_conv = jax.nn.silu(x_conv)
+
+    proj = x_conv @ m["x_proj"]                       # [B,S,dt_rank+2N]
+    dt_raw, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ m["dt_proj"] + m["dt_bias"])  # [B,S,d_in]
+    A = -jnp.exp(m["A_log"])                          # [d_in, N]
+    a = jnp.exp(dt[..., None] * A)                    # [B,S,d_in,N]
+    bx = (dt * x_conv)[..., None] * Bmat[:, :, None, :].astype(dt.dtype)
+
+    n_chunks = _chunk_count(S)
+    Tc = S // n_chunks
+    h0 = init_state if init_state is not None else \
+        jnp.zeros((B, d_in, N), dtype=jnp.float32)
+
+    a_c = a.reshape(B, n_chunks, Tc, d_in, N).astype(jnp.float32)
+    bx_c = bx.reshape(B, n_chunks, Tc, d_in, N).astype(jnp.float32)
+    c_c = Cmat.reshape(B, n_chunks, Tc, N).astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        ai, bxi, ci = inp
+        return jax.remat(_mamba_scan_chunk)(h, ai, bxi, ci)
+
+    h_final, ys = jax.lax.scan(
+        chunk_body, h0,
+        (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(bx_c, 1, 0),
+         jnp.moveaxis(c_c, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    y = y + m["D"].astype(x.dtype) * x_conv
+    out = (y * jax.nn.silu(z)) @ m["out_proj"]
+    if return_state:
+        conv_state = xp[:, -(K - 1):, :] if K > 1 else \
+            jnp.zeros((B, 0, d_in), x.dtype)
+        return out, {"h": h_final, "conv": conv_state}
+    return out
+
+
+def mamba_init_state(cfg, batch, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.ssm_state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_in), dtype),
+    }
+
+
+def mamba_decode(params, x, state, cfg):
+    """x: [B, 1, D]; state: {'h': [B,d_in,N], 'conv': [B,K-1,d_in]}."""
+    m = params["mamba"]
+    B = x.shape[0]
+    N = cfg.ssm_state_dim
+    dt_rank = max(1, cfg.d_model // 16)
+
+    xz = x[:, 0] @ m["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    hist = jnp.concatenate([state["conv"], x_in[:, None, :]], axis=1)  # [B,K,d]
+    x_conv = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, m["conv"]))
+    proj = x_conv @ m["x_proj"]
+    dt_raw, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ m["dt_proj"] + m["dt_bias"])
+    A = -jnp.exp(m["A_log"])
+    a = jnp.exp(dt[..., None] * A).astype(jnp.float32)
+    bx = ((dt * x_conv)[..., None] * Bmat[:, None, :].astype(dt.dtype)
+          ).astype(jnp.float32)
+    h = a * state["h"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, Cmat.astype(jnp.float32)).astype(x.dtype)
+    y = y + m["D"].astype(x.dtype) * x_conv
+    out = ((y * jax.nn.silu(z)) @ m["out_proj"])[:, None, :]
+    return out, {"h": h, "conv": hist[:, 1:, :]}
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+def rwkv_init(key, cfg, dtype):
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    F = cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 12)
+    s = D ** -0.5
+
+    def mat(k, a, b, sc=None):
+        return (jax.random.normal(k, (a, b), jnp.float32)
+                * (sc or a ** -0.5)).astype(dtype)
+
+    return {"rwkv": {
+        "wr": {"kernel": mat(ks[0], D, D)},
+        "wk": {"kernel": mat(ks[1], D, D)},
+        "wv": {"kernel": mat(ks[2], D, D)},
+        "wg": {"kernel": mat(ks[3], D, D)},
+        "wo": {"kernel": mat(ks[4], D, D)},
+        # data-dependent decay (the Finch novelty): w = f(x) via LoRA
+        "decay_lora_a": mat(ks[5], D, lora),
+        "decay_lora_b": mat(ks[6], lora, D, 0.01),
+        "decay_base": jnp.full((D,), -4.0, jnp.float32),
+        "bonus": jnp.full((H, hd), 0.5, jnp.float32),
+        # token-shift lerp coefficients for r,k,v,g,w
+        "mu": jnp.full((5, D), 0.5, jnp.float32),
+        "ln_out": L.norm_init(D, "layernorm"),
+        # channel mix
+        "mu_cm": jnp.full((2, D), 0.5, jnp.float32),
+        "cm_wk": {"kernel": mat(ks[7], D, F)},
+        "cm_wv": {"kernel": mat(ks[8], F, D)},
+        "cm_wr": {"kernel": mat(ks[9], D, D)},
+    }}
+
+
+def _wkv_chunk(S0, r, k, v, w, u):
+    """Sequential WKV recurrence within a chunk.
+    S0: [B,H,hd,hd]; r,k,v,w: [B,Tc,H,hd]; u: [H,hd].
+    o_t = r_t @ (S + u * k_t^T v_t);  S <- diag(w_t) S + k_t^T v_t."""
+    def step(S, inp):
+        ri, ki, vi, wi = inp                          # [B,H,hd]
+        kv = ki[..., :, None] * vi[..., None, :]      # [B,H,hd,hd]
+        o = jnp.einsum("bhk,bhkv->bhv", ri, S + u[..., None] * kv)
+        S = wi[..., :, None] * S + kv
+        return S, o
+    rt, kt, vt, wt = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S, os = jax.lax.scan(step, S0, (rt, kt, vt, wt))
+    return S, jnp.moveaxis(os, 0, 1)                  # [B,Tc,H,hd]
+
+
+def rwkv_time_mix(params, x, cfg, *, x_prev=None, state=None,
+                  return_state=False):
+    """x: [B,S,D]. x_prev: [B,D] last token of previous segment (decode).
+    state: [B,H,hd,hd] WKV state."""
+    p = params["rwkv"]
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+
+    if x_prev is None:
+        x_prev = jnp.zeros((B, D), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    lerp = [x + (shifted - x) * mu[i] for i in range(5)]  # r,k,v,g,w
+
+    r = (lerp[0] @ p["wr"]["kernel"]).reshape(B, S, H, hd)
+    k = (lerp[1] @ p["wk"]["kernel"]).reshape(B, S, H, hd)
+    v = (lerp[2] @ p["wv"]["kernel"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp[3] @ p["wg"]["kernel"])
+    # data-dependent decay in (0,1): exp(-exp(.))
+    dd = jnp.tanh(lerp[4].astype(jnp.float32) @ p["decay_lora_a"].astype(
+        jnp.float32)) @ p["decay_lora_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(p["decay_base"] + dd)).reshape(B, S, H, hd)
+
+    r = constrain(r, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+
+    S0 = state if state is not None else \
+        jnp.zeros((B, H, hd, hd), jnp.float32)
+    n_chunks = _chunk_count(S)
+    Tc = S // n_chunks
+    u = p["bonus"]
+
+    def reshape_c(t):
+        return jnp.moveaxis(
+            t.astype(jnp.float32).reshape(B, n_chunks, Tc, H, hd), 1, 0)
+
+    def chunk_body(Sc, inp):
+        ri, ki, vi, wi = inp
+        return jax.remat(_wkv_chunk)(Sc, ri, ki, vi, wi, u)
+
+    S_fin, os = jax.lax.scan(chunk_body, S0,
+                             (reshape_c(r), reshape_c(k), reshape_c(v),
+                              reshape_c(w)))
+    o = jnp.moveaxis(os, 0, 1).reshape(B, S, D).astype(x.dtype)
+
+    # per-head groupnorm
+    of = o.reshape(B, S, H, hd).astype(jnp.float32)
+    of = (of - of.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        of.var(-1, keepdims=True) + 1e-5)
+    o = L.apply_norm(p["ln_out"], of.reshape(B, S, D).astype(x.dtype),
+                     "layernorm")
+    out = (o * g) @ p["wo"]["kernel"]
+    if return_state:
+        return out, {"wkv": S_fin, "x_prev_tm": x[:, -1, :]}
+    return out
+
+
+def rwkv_channel_mix(params, x, cfg, *, x_prev=None, return_state=False):
+    p = params["rwkv"]
+    B, S, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, D), x.dtype)
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu_cm"].astype(x.dtype)
+    xk = x + (shifted - x) * mu[0]
+    xr = x + (shifted - x) * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"]["kernel"]))
+    kk = constrain(kk, "batch", None, "mlp")
+    vv = kk @ p["cm_wv"]["kernel"]
+    rr = jax.nn.sigmoid(xr @ p["cm_wr"]["kernel"])
+    out = rr * vv
+    if return_state:
+        return out, x[:, -1, :]
+    return out
+
+
+def rwkv_init_state(cfg, batch, dtype):
+    D = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    return {
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_prev_tm": jnp.zeros((batch, D), dtype),
+        "x_prev_cm": jnp.zeros((batch, D), dtype),
+    }

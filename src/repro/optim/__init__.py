@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, sgd, clip_by_global_norm,
+)
+from repro.optim.schedule import (  # noqa: F401
+    constant_schedule, cosine_schedule, linear_warmup_cosine,
+)

@@ -1,0 +1,106 @@
+"""Pure-pytree optimizers (Adam/AdamW/SGD) with the optax-style
+(init, update) interface, written in-house so the framework has no
+dependencies beyond jax/numpy.
+
+Moments are kept in float32 regardless of param dtype (mixed-precision
+training: bf16 params, fp32 optimizer state), and the sharding layer
+gives moments the same specs as their params (plus optional ZeRO-1
+data-axis sharding at the launcher level).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, state)
+
+
+def _tree_zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+         max_grad_norm: Optional[float] = 1.0):
+    """lr: float or schedule fn step->float."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": _tree_zeros_like_f32(params),
+                "nu": _tree_zeros_like_f32(params)}
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, gn = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gn = jnp.zeros(())
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mu_hat = mu / (1 - b1 ** t)
+            nu_hat = nu / (1 - b2 ** t)
+            step_v = mu_hat / (jnp.sqrt(nu_hat) + eps)
+            if weight_decay:
+                step_v = step_v + weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr_t * step_v
+            return new_p.astype(p.dtype), mu, nu
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        new_params = jax.tree.map(lambda x: x[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda x: x[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda x: x[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu}, {"grad_norm": gn}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay=0.01, **kw):
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def sgd(lr, momentum=0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum:
+            return {"v": _tree_zeros_like_f32(params)}
+        return {}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum:
+            new_v = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(jnp.float32),
+                state["v"], grads)
+            new_p = jax.tree.map(
+                lambda p, v: (p.astype(jnp.float32) - lr_t * v
+                              ).astype(p.dtype), params, new_v)
+            return new_p, {"v": new_v}, {}
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, {}, {}
+
+    return Optimizer(init, update)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules as pure functions of the step counter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr, total_steps, final_frac=0.1):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(peak_lr, warmup_steps, total_steps,
+                         final_frac=0.1):
+    def fn(step):
+        warm = peak_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (  # noqa: F401
+    collective_bytes_from_hlo, roofline_terms, summarize,
+)

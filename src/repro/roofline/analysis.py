@@ -1,0 +1,135 @@
+"""Roofline model from the compiled dry-run artifact (no real TPU):
+
+  compute term    = per_chip_FLOPs / peak_FLOP/s
+  memory term     = per_chip_HBM_bytes / HBM_bw
+  collective term = per_chip_wire_bytes / ICI_bw
+
+`compiled.cost_analysis()` on the SPMD-partitioned program reports
+*per-device* flops / bytes accessed, so the terms divide by per-chip
+peaks directly. Collective bytes are NOT in cost_analysis: we parse the
+post-partitioning HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, converted
+to ring-algorithm wire bytes:
+
+  all-reduce       2 * size * (g-1)/g
+  all-gather       size_out * (g-1)/g
+  reduce-scatter   size_in  * (g-1)/g
+  all-to-all       size * (g-1)/g
+  collective-permute  size
+
+where g is the replica-group size of that op. One active ICI link per
+op is assumed (conservative; recorded in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.5 = bf16[8,128,3584] all-reduce(...), replica_groups=...
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Per-device wire-byte totals by collective kind."""
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-start(" not in line and not any(
+                k in line for k in ("all-reduce(", "all-gather(",
+                                    "reduce-scatter(", "all-to-all(",
+                                    "collective-permute(")):
+            continue
+        m = _COLL_RE.search(line)
+        shapes = []
+        kind = None
+        if m:
+            kind = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                kind = mt.group(2)
+                shapes = _SHAPE_RE.findall(mt.group(1))
+        if not kind:
+            continue
+        size = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        wire = {"all-reduce": 2 * size * frac,
+                "all-gather": size * frac,
+                "reduce-scatter": size * frac,
+                "all-to-all": size * frac,
+                "collective-permute": size}[kind]
+        out[kind] += wire
+        counts[kind] += 1
+    out = dict(out)
+    out["total"] = sum(out.values())
+    out["counts"] = dict(counts)
+    return out
+
+
+def roofline_terms(per_chip_flops, per_chip_bytes, per_chip_wire_bytes,
+                   model_flops_per_chip=None):
+    """All inputs per chip; returns the three terms in seconds plus the
+    dominant bottleneck."""
+    t_c = per_chip_flops / PEAK_FLOPS_BF16
+    t_m = per_chip_bytes / HBM_BW
+    t_x = per_chip_wire_bytes / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+              key=lambda kv: kv[1])[0]
+    out = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+           "bottleneck": dom,
+           "bound_s": max(t_c, t_m, t_x)}
+    if model_flops_per_chip is not None:
+        out["model_flops_per_chip"] = model_flops_per_chip
+        out["useful_flop_frac"] = (model_flops_per_chip / per_chip_flops
+                                   if per_chip_flops else 0.0)
+    return out
+
+
+def summarize(record: dict) -> str:
+    r = record
+    t = r["roofline"]
+    return (f"{r['arch']:22s} {r['shape']:12s} mesh={r['mesh']:9s} "
+            f"compute={t['compute_s']*1e3:9.3f}ms "
+            f"memory={t['memory_s']*1e3:9.3f}ms "
+            f"coll={t['collective_s']*1e3:9.3f}ms "
+            f"-> {t['bottleneck']}")

@@ -1,0 +1,255 @@
+"""Loop-aware cost extraction from post-SPMD-partitioning HLO text.
+
+Why: ``compiled.cost_analysis()`` counts each while-loop body ONCE, but
+our layer stacks are lax.scan'ed -- a 56-layer model's per-layer flops,
+bytes, and collectives execute n_layers times while appearing once in
+the HLO. This module rebuilds the call graph (ENTRY -> call / fusion /
+while bodies), multiplies every computation's costs by its execution
+count (XLA annotates ``known_trip_count`` on compiled while ops), and
+returns loop-aware totals:
+
+  flops            2*M*N*K for every dot, x execution count
+  hbm_bytes        operand+output bytes of every top-level instruction
+                   (fusion internals excluded: register/VMEM resident)
+  collective wire bytes by kind (ring-algorithm factors)
+
+All numbers are per-device (the partitioned program is per-device).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_OP_RE = re.compile(r"^\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+                    r"([\w\-]+)\(")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+_TRIP_RE2 = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
+# conditionals: both branches counted once (upper bound; a
+# fedavg_every-style sync branch actually runs 1/E of steps -- callers
+# that know the duty cycle can subtract, see launch/dryrun.py)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _parse_shapes(type_str):
+    return [(dt, dims) for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _bytes_of(type_str):
+    total = 0
+    for dt, dims in _parse_shapes(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+    operands: list
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # instr name -> type str
+
+
+def split_computations(txt: str):
+    comps = {}
+    cur = None
+    entry = None
+    for line in txt.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        type_str, op = om.group(1), om.group(2)
+        after = rest[om.end():]
+        # operands: %refs before the closing paren of the op call
+        depth = 1
+        end = 0
+        for i, ch in enumerate(after):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERANDS_RE.findall(after[:end])
+        instr = Instr(name, type_str, op, line, operands)
+        cur.instrs.append(instr)
+        cur.shapes[name] = type_str
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, comp: Computation):
+    """2 * prod(out dims) * prod(contracted dims of lhs)."""
+    out_elems = 0
+    for dt, dims in _parse_shapes(instr.type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out_elems += n
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    if not m or not instr.operands:
+        return 2 * out_elems  # fallback
+    lhs_shape = comp.shapes.get(instr.operands[0])
+    if lhs_shape is None:
+        return 2 * out_elems
+    shapes = _parse_shapes(lhs_shape)
+    if not shapes:
+        return 2 * out_elems
+    dims = [int(d) for d in shapes[0][1].split(",")] if shapes[0][1] else []
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2 * out_elems * k
+
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _collective_wire(instr: Instr):
+    kind = instr.op.replace("-start", "")
+    if kind not in _COLL_KINDS:
+        return None
+    size = _bytes_of(instr.type_str)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.line)
+    if m:
+        g = int(m.group(2))
+    else:
+        m = re.search(r"replica_groups=\{\{([^}]*)\}", instr.line)
+        g = len(m.group(1).split(",")) if m else 2
+    if g <= 1:
+        return kind, 0.0
+    frac = (g - 1) / g
+    wire = {"all-reduce": 2 * size * frac, "all-gather": size * frac,
+            "reduce-scatter": size * frac, "all-to-all": size * frac,
+            "collective-permute": float(size)}[kind]
+    return kind, wire
+
+
+def analyze(txt: str):
+    """Loop-aware per-device costs from compiled HLO text."""
+    comps, entry = split_computations(txt)
+
+    # per-computation local costs and call edges
+    local = {}
+    for cname, comp in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        coll = defaultdict(float)
+        coll_counts = defaultdict(float)
+        calls = []   # (callee, multiplier)
+        fused_callees = set()
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += _dot_flops(ins, comp)
+            cw = _collective_wire(ins)
+            if cw:
+                coll[cw[0]] += cw[1]
+                coll_counts[cw[0]] += 1
+            # call edges
+            bm = _BRANCHES_RE.search(ins.line)
+            if bm:
+                for br in bm.group(1).split(","):
+                    calls.append((br.strip().lstrip("%"), 1.0))
+            for callee in _CALLS_RE.findall(ins.line):
+                mult = 1.0
+                if ins.op == "while":
+                    tm = _TRIP_RE.search(ins.line) or _TRIP_RE2.search(
+                        ins.line)
+                    mult = float(tm.group(1)) if tm else 1.0
+                    if f"condition=%{callee}" in ins.line or \
+                            f"condition={callee}" in ins.line:
+                        continue  # cond: negligible
+                calls.append((callee, mult))
+                if ins.op == "fusion":
+                    fused_callees.add(callee)
+            # HBM bytes: top-level instruction outputs + operands
+            # (fusion bodies excluded below via is_fused marker)
+            if ins.op not in ("parameter", "constant", "tuple",
+                              "get-tuple-element", "bitcast"):
+                bytes_ += _bytes_of(ins.type_str)
+                for opnd in ins.operands:
+                    if opnd in comp.shapes:
+                        bytes_ += _bytes_of(comp.shapes[opnd])
+        local[cname] = dict(flops=flops, bytes=bytes_, coll=coll,
+                            coll_counts=coll_counts, calls=calls,
+                            fused=fused_callees)
+
+    # propagate execution multipliers from ENTRY
+    mult = defaultdict(float)
+    bytes_enabled = {}  # fused computations contribute flops, not bytes
+
+    def visit(cname, m, count_bytes):
+        mult[cname] += m
+        if cname in bytes_enabled:
+            bytes_enabled[cname] = bytes_enabled[cname] or count_bytes
+        else:
+            bytes_enabled[cname] = count_bytes
+        for callee, cm in local[cname]["calls"]:
+            if callee not in local:
+                continue
+            inner_bytes = count_bytes and \
+                callee not in local[cname]["fused"]
+            visit(callee, m * cm, inner_bytes)
+
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    visit(entry, 1.0, True)
+
+    totals = dict(flops=0.0, hbm_bytes=0.0)
+    coll = defaultdict(float)
+    coll_counts = defaultdict(float)
+    for cname, m in mult.items():
+        lc = local[cname]
+        totals["flops"] += lc["flops"] * m
+        if bytes_enabled.get(cname):
+            totals["hbm_bytes"] += lc["bytes"] * m
+        for k, v in lc["coll"].items():
+            coll[k] += v * m
+            coll_counts[k] += lc["coll_counts"][k] * m
+    coll = dict(coll)
+    coll["total"] = sum(coll.values())
+    coll["counts"] = {k: int(v) for k, v in coll_counts.items()}
+    totals["collective_wire_bytes"] = coll
+    return totals

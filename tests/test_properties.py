@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exchange import fedavg, hidden_output_exchange
+from repro.core.partition import make_partition
+from repro.kernels.rwkv6_scan import rwkv6_scan_ref
+from repro.metrics import f1_score
+from repro.models.model import padded_vocab
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(n_features=st.integers(2, 900), n_clients=st.integers(1, 10),
+       ds=st.sampled_from(["titanic", "bank"]))
+def test_partition_disjoint_complete(n_features, n_clients, ds):
+    """Vertical partitioning covers every feature exactly once for any
+    (features, clients) combination."""
+    part = make_partition(ds, n_features, n_clients)
+    allidx = np.concatenate(part) if len(part) else np.array([])
+    assert sorted(allidx.tolist()) == list(range(n_features))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 8), b=st.integers(1, 5), h=st.integers(1, 7))
+def test_exchange_is_sum_invariant(n, b, h):
+    """Exchange output is invariant to client permutation and equals the
+    sum for every client (Algorithm 2)."""
+    x = np.random.RandomState(0).randn(n, b, h).astype(np.float32)
+    out = np.asarray(hidden_output_exchange(jnp.asarray(x)))
+    perm = np.random.RandomState(1).permutation(n)
+    out_p = np.asarray(hidden_output_exchange(jnp.asarray(x[perm])))
+    np.testing.assert_allclose(out[perm], out_p, atol=1e-5)
+    np.testing.assert_allclose(out, np.broadcast_to(x.sum(0), out.shape),
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 6))
+def test_fedavg_idempotent(n):
+    """FedAvg twice == FedAvg once (averaging identical replicas)."""
+    tree = {"w": jnp.asarray(np.random.RandomState(n).randn(n, 3, 3))}
+    once = fedavg(tree)
+    twice = fedavg(once)
+    np.testing.assert_allclose(np.asarray(once["w"]),
+                               np.asarray(twice["w"]), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(labels=st.lists(st.integers(0, 3), min_size=2, max_size=60),
+       preds=st.lists(st.integers(0, 3), min_size=2, max_size=60))
+def test_f1_bounds_and_perfect(labels, preds):
+    n = min(len(labels), len(preds))
+    y, p = np.array(labels[:n]), np.array(preds[:n])
+    f1 = f1_score(y, p, "macro")
+    assert 0.0 <= f1 <= 1.0
+    assert f1_score(y, y, "macro") == 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(v=st.integers(1, 300000))
+def test_padded_vocab_properties(v):
+    p = padded_vocab(v)
+    assert p >= v and p % 128 == 0 and p - v < 128
+
+
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(split=st.integers(1, 7))
+def test_rwkv_scan_state_composition(split):
+    """Running the WKV scan on [0,T) equals running [0,s) then [s,T)
+    with the carried state -- the invariant that makes chunked kernels
+    and decode-from-prefill correct."""
+    B, T, H, hd = 1, 8, 2, 8
+    rng = np.random.RandomState(split)
+    r, k, v = (jnp.asarray(rng.randn(B, T, H, hd), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(1 / (1 + np.exp(-rng.randn(B, T, H, hd))) * 0.5 + 0.4,
+                    jnp.float32)
+    u = jnp.asarray(rng.randn(H, hd) * 0.2, jnp.float32)
+    full = rwkv6_scan_ref(r, k, v, w, u)
+
+    s = split % T
+    if s == 0:
+        return
+    # manual scan with state carry across the split
+    def scan_with_state(r, k, v, w, S0):
+        def step(S, inp):
+            ri, ki, vi, wi = inp
+            kv = ki[..., :, None] * vi[..., None, :]
+            o = jnp.einsum("bhk,bhkv->bhv", ri, S + u[..., :, None] * kv)
+            S = wi[..., :, None] * S + kv
+            return S, o
+        args = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+        S, o = jax.lax.scan(step, S0, args)
+        return S, jnp.moveaxis(o, 0, 1)
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    S1, o1 = scan_with_state(r[:, :s], k[:, :s], v[:, :s], w[:, :s], S0)
+    _, o2 = scan_with_state(r[:, s:], k[:, s:], v[:, s:], w[:, s:], S1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(full), atol=1e-4, rtol=1e-4)

@@ -1,0 +1,80 @@
+"""Roofline machinery unit tests: HLO parsing, loop-aware multipliers,
+wire-byte formulas."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import (collective_bytes_from_hlo,
+                                     roofline_terms)
+from repro.roofline.hlo_costs import analyze, split_computations
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(197e12, 0.0, 0.0)     # exactly 1s of compute
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert t["bottleneck"] == "compute"
+    t = roofline_terms(0.0, 819e9, 50e9 * 3)
+    assert t["bottleneck"] == "collective"
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+
+
+def _compile_hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_hlo_dot_flops_counted():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    txt = _compile_hlo(lambda x, y: x @ y, a, b)
+    t = analyze(txt)
+    expect = 2 * 128 * 256 * 64
+    assert abs(t["flops"] - expect) / expect < 0.05, t["flops"]
+
+
+def test_hlo_loop_multiplier():
+    """A scan of 10 matmuls must count 10x the flops of one matmul."""
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def one(x):
+        return x @ x
+
+    def looped(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    t1 = analyze(_compile_hlo(one, a))
+    t10 = analyze(_compile_hlo(looped, a))
+    ratio = t10["flops"] / max(t1["flops"], 1)
+    assert 8 <= ratio <= 12, ratio
+
+
+def test_collective_regex_parses_groups():
+    hlo = """
+ENTRY %main (p: f32[256,128]) -> f32[256,128] {
+  %p = f32[256,128] parameter(0)
+  ROOT %all-reduce.1 = f32[256,128] all-reduce(%p), replica_groups=[16,16]<=[256], to_apply=%add
+}
+"""
+    out = collective_bytes_from_hlo(hlo)
+    size = 256 * 128 * 4
+    expect = 2 * size * 15 / 16
+    assert abs(out["all-reduce"] - expect) < 1, out
+
+
+def test_split_computations_finds_entry():
+    hlo = """
+%helper (x: f32[2]) -> f32[2] {
+  %x = f32[2] parameter(0)
+  ROOT %neg = f32[2] negate(%x)
+}
+
+ENTRY %main (p: f32[2]) -> f32[2] {
+  %p = f32[2] parameter(0)
+  ROOT %c = f32[2] call(%p), to_apply=%helper
+}
+"""
+    comps, entry = split_computations(hlo)
+    assert entry == "main"
+    assert "helper" in comps
