@@ -63,7 +63,7 @@ def weighted_fedavg_ablation(dataset="mnist", n_clients=7, seeds=(0, 1)):
                         return jnp.broadcast_to(m, leaf.shape)
                     return jax.tree.map(avg, stacked)
 
-                fed._fedavg = jax.jit(weighted_avg)
+                fed.set_fedavg(weighted_avg)
             r = fed.train()
             f1s.append(r["final"]["f1"])
         key = "weighted_by_features" if weighted else "uniform (paper)"

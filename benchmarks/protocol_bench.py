@@ -1,0 +1,90 @@
+"""Protocol engine throughput: per-batch Python-loop dispatch vs the
+fused lax.scan round (repro.core.protocol.make_round_fn), plus sweep
+throughput (seed-vmapped federations from repro.core.sweep).
+
+Emits benchmarks/results/BENCH_protocol.json so the perf trajectory is
+recorded across PRs:
+
+  {"loop_steps_per_sec": ..., "scan_steps_per_sec": ...,
+   "scan_speedup": ..., "sweep": {...}}
+
+Run:  PYTHONPATH=src python -m benchmarks.protocol_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
+from repro.core.sweep import SweepConfig, run_cell
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# the paper's MNIST configuration, sized so one round is ~100 steps
+BENCH_CFG = dict(dataset="mnist", n_clients=3, epochs=2, n_samples=4000)
+
+
+def _bench_engine(fed, run_round, n_steps, iters=3):
+    def fresh():
+        ik, _ = train_keys(jax.random.PRNGKey(0))
+        p = fed.init_params(ik)
+        return p, jax.vmap(fed.opt.init)(p)
+
+    p, o = fresh()
+    p, o, _, losses = run_round(p, o)       # warm-up / compile
+    jax.block_until_ready(losses)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        p, o, _, losses = run_round(p, o)
+    jax.block_until_ready(losses)
+    return iters * n_steps / (time.perf_counter() - t0)
+
+
+def run():
+    fed = DeVertiFL(ProtocolConfig(rounds=1, **BENCH_CFG))
+    _, lk = train_keys(jax.random.PRNGKey(0))
+    rkey = jax.random.fold_in(lk, 0)
+    si = jnp.zeros((), jnp.int32)
+    n_steps = fed.pcfg.epochs * fed.n_batches
+
+    scan = _bench_engine(
+        fed, lambda p, o: fed._round(p, o, si, rkey, fed._xtr, fed._ytr,
+                                     fed.masks), n_steps)
+    loop = _bench_engine(
+        fed, lambda p, o: fed._python_round(p, o, si, rkey), n_steps)
+
+    sweep_cell = run_cell("mnist", "devertifl", 3,
+                          SweepConfig(seeds=(0, 1, 2, 3), rounds=2,
+                                      epochs=2, n_samples=2000))
+    report = {
+        "config": BENCH_CFG,
+        "steps_per_round": n_steps,
+        "loop_steps_per_sec": loop,
+        "scan_steps_per_sec": scan,
+        "scan_speedup": scan / loop,
+        "sweep": {
+            "n_seeds": len(sweep_cell["seeds"]),
+            "steps_per_sec": sweep_cell["steps_per_sec"],
+            "wall_s": sweep_cell["wall_s"],
+        },
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_protocol.json"), "w") as f:
+        json.dump(report, f, indent=1)
+
+    return [
+        ("protocol/loop", 1e6 / loop, f"steps_per_sec={loop:.1f}"),
+        ("protocol/scan", 1e6 / scan, f"steps_per_sec={scan:.1f}"),
+        ("protocol/scan_speedup", 0.0, f"x{scan / loop:.2f}"),
+        ("protocol/sweep4seeds", sweep_cell["wall_s"] * 1e6,
+         f"steps_per_sec={sweep_cell['steps_per_sec']:.1f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -13,13 +13,18 @@ def main() -> None:
     ap.add_argument("--paper", action="store_true",
                     help="full client range 2..10, 3 seeds (slow)")
     ap.add_argument("--only", default=None,
-                    help="comma list: figures,table2,kernels,roofline")
+                    help="comma list: figures,table2,kernels,roofline,"
+                         "ablations,protocol")
     args = ap.parse_args()
     which = set((args.only or
-                 "figures,table2,kernels,roofline,ablations").split(","))
+                 "figures,table2,kernels,roofline,ablations,protocol"
+                 ).split(","))
 
     rows = []
     t0 = time.time()
+    if "protocol" in which:
+        from benchmarks import protocol_bench
+        rows += protocol_bench.run()
     if "kernels" in which:
         from benchmarks import kernels_bench
         rows += kernels_bench.run()

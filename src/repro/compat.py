@@ -1,0 +1,32 @@
+"""Version-tolerance shims for jax API drift.
+
+The repo targets the installed jax (0.4.x) but is written against the
+modern spellings where possible. Two drifts matter today:
+
+  * ``shard_map`` moved from ``jax.experimental.shard_map`` to the
+    top-level ``jax`` namespace (jax >= 0.6).
+  * its replication-check kwarg was renamed ``check_rep`` ->
+    ``check_vma`` in the same move.
+
+``repro.compat.shard_map`` accepts the modern ``check_vma=`` spelling
+and routes it to whichever kwarg the installed jax understands, so
+call sites never need a version branch.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # jax >= 0.6: top-level export, kwarg spelled check_vma
+    from jax import shard_map as _shard_map
+    _CHECK_KWARG = "check_vma"
+except ImportError:  # jax 0.4/0.5: experimental module, kwarg check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    if check_vma is not None:
+        kw[_CHECK_KWARG] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

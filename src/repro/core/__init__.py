@@ -3,7 +3,11 @@
 # HiddenOutputExchange, local backward, P2P FedAvg), plus the baselines
 # it is evaluated against.
 from repro.core.protocol import (  # noqa: F401
-    DeVertiFL, ProtocolConfig, train_federation,
+    DeVertiFL, ProtocolConfig, make_round_fn, make_step_fn,
+    train_federation,
 )
+from repro.core.sweep import SweepConfig, run_cell, run_grid  # noqa: F401
 from repro.core.exchange import hidden_output_exchange  # noqa: F401
-from repro.core.partition import make_partition, masks_for  # noqa: F401
+from repro.core.partition import (  # noqa: F401
+    make_partition, masks_for, stacked_masks,
+)

@@ -22,3 +22,14 @@ def masks_for(partition, n_features, dtype=np.float32):
     """[n_clients, n_features] 0/1 masks (the zero-padding operators)."""
     return np.stack([V.feature_mask(idx, n_features, dtype)
                      for idx in partition])
+
+
+def stacked_masks(dataset, n_features, n_clients, seeds, dtype=np.float32):
+    """[n_seeds, n_clients, n_features] masks -- one vertical partition
+    per seed, for seed-vmapped sweeps. Only seeded partitioners
+    (titanic's random_features) actually vary across seeds; the
+    round-robin datasets yield the same partition in every lane."""
+    return np.stack([
+        masks_for(make_partition(dataset, n_features, n_clients, seed=s),
+                  n_features, dtype)
+        for s in seeds])

@@ -6,11 +6,34 @@ All n clients are simulated in one process by stacking per-client
 parameters on a leading axis and vmapping; this is numerically
 identical to n communicating peers (the exchange and FedAvg are the
 only cross-client dataflows, and they are explicit).
+
+Engine layout
+-------------
+The protocol is factored into pure functions so the whole federation
+can be jitted, scanned, and vmapped:
+
+  * make_step_fn      one optimizer step for all clients (mode-specific)
+  * make_perm_fn      device-side epoch shuffles (jax.random.permutation)
+  * make_round_fn     a full round -- epochs x batches as ONE lax.scan
+                      with the round-end FedAvg folded in, so a round is
+                      a single XLA executable with no host round-trips
+  * make_predict_fn   per-client inference with the evaluation exchange
+
+``DeVertiFL.train`` drives make_round_fn under jit (engine="scan", the
+default). A per-batch host-dispatched loop is retained as
+engine="python" (the pre-refactor execution strategy, but on the new
+key derivation: device permutations instead of the old host-side
+numpy shuffles, so fixed-seed numbers differ from the seed commit).
+Both engines consume the identical device-generated permutation
+stream, so their loss/F1 trajectories match bit-for-bit at a fixed
+seed (tests/test_engine.py asserts this). repro.core.sweep vmaps
+make_round_fn over seeds for grid experiments.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from functools import partial
 from typing import Optional
 
 import jax
@@ -44,25 +67,195 @@ class ProtocolConfig:
     fedavg: bool = True
     seed: int = 0
     n_samples: Optional[int] = None     # dataset size override (speed)
+    engine: str = "scan"                # scan | python (reference loop)
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
 
 
-_ARCH_FOR = {"mnist": "paper-mlp-mnist", "fmnist": "paper-mlp-fmnist",
-             "titanic": "paper-mlp-titanic", "bank": "paper-mlp-bank"}
+ARCH_FOR = {"mnist": "paper-mlp-mnist", "fmnist": "paper-mlp-fmnist",
+            "titanic": "paper-mlp-titanic", "bank": "paper-mlp-bank"}
 
 
+# ---------------------------------------------------------------------------
+# pure protocol pieces (shared by DeVertiFL and repro.core.sweep)
+# ---------------------------------------------------------------------------
+def client_hidden(model, exchange_at, p, xm):
+    """Forward up to the exchange point (hidden layer k, or logits)."""
+    if exchange_at == -1:
+        return model.head(p, model.forward_hidden(p, xm))
+    return model.forward_hidden(p, xm, upto=exchange_at)
+
+
+def rest(model, exchange_at, p, h):
+    """Forward from the exchange point to logits."""
+    if exchange_at == -1:
+        return h
+    for i in range(exchange_at, model.n_hidden):
+        h = jax.nn.relu(jnp.matmul(h, p[f"layer_{i}"]["kernel"])
+                        + p[f"layer_{i}"]["bias"])
+    return model.head(p, h)
+
+
+def _ce(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def make_step_fn(model, opt, pcfg):
+    """One all-clients optimizer step for pcfg.mode.
+
+    Signature: step(params, opt_state, masks, xb, yb, step_idx)
+      -> (params, opt_state, mean_loss).  masks is an argument (not a
+    closure) so sweeps can vmap it over per-seed partitions.
+    """
+    hidden = partial(client_hidden, model, pcfg.exchange_at)
+    through = partial(rest, model, pcfg.exchange_at)
+
+    def devertifl_step(params, opt_state, masks, xb, yb, step_idx):
+        xm = xb[None] * masks[:, None, :]           # [n, B, F] zeropad
+        h_all = jax.vmap(hidden)(params, xm)
+        h_sum = jax.lax.stop_gradient(h_all.sum(0))  # peers as data
+
+        def client_loss(p, x_i):
+            h_i = hidden(p, x_i)
+            # value == full exchanged sum; grad flows only through h_i
+            h = h_i + h_sum - jax.lax.stop_gradient(h_i)
+            return _ce(through(p, h), yb)
+
+        losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
+            params, xm)
+        params, opt_state, _ = jax.vmap(
+            lambda g, s, p: opt.update(g, s, p, step_idx))(
+                grads, opt_state, params)
+        return params, opt_state, losses.mean()
+
+    def nonfed_step(params, opt_state, masks, xb, yb, step_idx):
+        xm = xb[None] * masks[:, None, :]
+
+        def client_loss(p, x_i):
+            h_i = hidden(p, x_i)
+            return _ce(through(p, h_i), yb)
+
+        losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
+            params, xm)
+        params, opt_state, _ = jax.vmap(
+            lambda g, s, p: opt.update(g, s, p, step_idx))(
+                grads, opt_state, params)
+        return params, opt_state, losses.mean()
+
+    def verticomb_step(params, opt_state, masks, xb, yb, step_idx):
+        xm = xb[None] * masks[:, None, :]
+
+        def total_loss(ps):
+            h_all = jax.vmap(hidden)(ps, xm)
+            h_sum = h_all.sum(0)                    # grads flow to all
+            logits = jax.vmap(lambda p: through(p, h_sum))(ps)
+            return jax.vmap(_ce, in_axes=(0, None))(logits, yb).mean()
+
+        loss, grads = jax.value_and_grad(total_loss)(params)
+        params, opt_state, _ = jax.vmap(
+            lambda g, s, p: opt.update(g, s, p, step_idx))(
+                grads, opt_state, params)
+        return params, opt_state, loss
+
+    return {"devertifl": devertifl_step, "non_federated": nonfed_step,
+            "verticomb": verticomb_step}[pcfg.mode]
+
+
+def make_perm_fn(pcfg, n_train):
+    """Device-side epoch shuffles: perms(round_key) -> [epochs * n_batches,
+    batch_size] int32 batch indices, one independent permutation per
+    epoch.  Returns (perm_fn, n_batches, batch_size)."""
+    bs = min(pcfg.batch_size, n_train)
+    n_batches = n_train // bs
+
+    def perms(key):
+        keys = jax.random.split(key, pcfg.epochs)
+        order = jax.vmap(
+            lambda k: jax.random.permutation(k, n_train))(keys)
+        return order[:, :n_batches * bs].reshape(
+            pcfg.epochs * n_batches, bs)
+
+    return perms, n_batches, bs
+
+
+def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None):
+    """One De-VertiFL round as a single jittable function: generate the
+    epoch permutations on device, lax.scan the step over every batch of
+    every epoch (step_idx carried in the scan), then apply the P2P
+    FedAvg (Algorithm 1 lines 16-19) to the carry-out parameters.
+
+    Signature: round_fn(params, opt_state, step_idx, key, xtr, ytr,
+    masks) -> (params, opt_state, step_idx, losses[epochs*n_batches]).
+    Data and masks are arguments so a sweep can vmap the whole round
+    over a leading seed axis. fedavg_fn overrides the uniform-mean
+    aggregation (e.g. the weighted-FedAvg ablation); it is baked into
+    the jitted round, so pass it here rather than patching afterwards.
+    """
+    step = make_step_fn(model, opt, pcfg)
+    perm_fn, _, _ = make_perm_fn(pcfg, n_train)
+    do_fedavg = pcfg.fedavg and pcfg.mode != "non_federated"
+    fedavg_fn = fedavg_fn or fedavg
+
+    def round_fn(params, opt_state, step_idx, key, xtr, ytr, masks):
+        idx = perm_fn(key)
+
+        def body(carry, batch_idx):
+            params, opt_state, step_idx = carry
+            xb = jnp.take(xtr, batch_idx, axis=0)
+            yb = jnp.take(ytr, batch_idx, axis=0)
+            params, opt_state, loss = step(params, opt_state, masks,
+                                           xb, yb, step_idx)
+            return (params, opt_state, step_idx + 1), loss
+
+        (params, opt_state, step_idx), losses = jax.lax.scan(
+            body, (params, opt_state, step_idx), idx)
+        if do_fedavg:
+            params = fedavg_fn(params)
+        return params, opt_state, step_idx, losses
+
+    return round_fn
+
+
+def make_predict_fn(model, pcfg):
+    """predict(params, x, masks) -> [n_clients, B] class predictions."""
+    hidden = partial(client_hidden, model, pcfg.exchange_at)
+    through = partial(rest, model, pcfg.exchange_at)
+
+    def predict(params, x, masks):
+        xm = x[None] * masks[:, None, :]
+        h_all = jax.vmap(hidden)(params, xm)
+        if pcfg.mode in ("devertifl", "verticomb"):
+            h_all = hidden_output_exchange(h_all, differentiable=False)
+        logits = jax.vmap(through)(params, h_all)   # [n, B, C]
+        return jnp.argmax(logits, axis=-1)          # per-client preds
+
+    return predict
+
+
+def train_keys(key):
+    """Split a federation key into (init_key, loop_key); round r uses
+    fold_in(loop_key, r). Shared by DeVertiFL.train and sweep so a
+    sweep lane reproduces the standalone run bit-for-bit."""
+    init_key, loop_key = jax.random.split(key)
+    return init_key, loop_key
+
+
+# ---------------------------------------------------------------------------
 class DeVertiFL:
     """One federation instance: model, partition, per-client params."""
 
-    def __init__(self, pcfg: ProtocolConfig):
+    def __init__(self, pcfg: ProtocolConfig, fedavg_fn=None):
         self.pcfg = pcfg
-        self.mcfg = get_config(_ARCH_FOR[pcfg.dataset])
+        self._fedavg_fn = fedavg_fn
+        self.mcfg = get_config(ARCH_FOR[pcfg.dataset])
         self.model = PaperMLP(self.mcfg)
         xtr, ytr, xte, yte = SD.make_dataset(pcfg.dataset, pcfg.n_samples,
                                              seed=pcfg.seed)
         self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
+        self._xtr = jnp.asarray(xtr)
+        self._ytr = jnp.asarray(ytr)
         self.n_features = self.model.in_features
         part = PT.make_partition(pcfg.dataset, self.n_features,
                                  pcfg.n_clients, seed=pcfg.seed)
@@ -76,100 +269,35 @@ class DeVertiFL:
         keys = jax.random.split(key, self.pcfg.n_clients)
         return jax.vmap(self.model.init)(keys)
 
-    def _client_hidden(self, p, xm):
-        """Forward up to the exchange point (hidden layer k, or logits)."""
-        ex = self.pcfg.exchange_at
-        if ex == -1:
-            h = self.model.forward_hidden(p, xm)
-            return self.model.head(p, h)
-        return self.model.forward_hidden(p, xm, upto=ex)
-
-    def _rest(self, p, h):
-        """Forward from the exchange point to logits."""
-        ex = self.pcfg.exchange_at
-        if ex == -1:
-            return h
-        mdl = self.model
-        for i in range(ex, mdl.n_hidden):
-            h = jax.nn.relu(jax.numpy.matmul(h, p[f"layer_{i}"]["kernel"])
-                            + p[f"layer_{i}"]["bias"])
-        return mdl.head(p, h)
-
-    @staticmethod
-    def _ce(logits, labels):
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
-
     # ------------------------------------------------------------------
     def _build_steps(self):
-        mode = self.pcfg.mode
-        masks = self.masks
+        pcfg = self.pcfg
+        n_train = len(self.xtr)
+        fa = self._fedavg_fn or fedavg
+        self._step = jax.jit(make_step_fn(self.model, self.opt, pcfg),
+                             donate_argnums=(0, 1))
+        perm_fn, self.n_batches, self.bs = make_perm_fn(pcfg, n_train)
+        self._perms = jax.jit(perm_fn)
+        self._round = jax.jit(
+            make_round_fn(self.model, self.opt, pcfg, n_train,
+                          fedavg_fn=fa),
+            donate_argnums=(0, 1))
+        self._fedavg = jax.jit(fa, donate_argnums=(0,))
+        self._predict = jax.jit(make_predict_fn(self.model, pcfg))
 
-        def devertifl_step(params, opt_state, xb, yb, step_idx):
-            xm = xb[None] * masks[:, None, :]           # [n, B, F] zeropad
-            h_all = jax.vmap(self._client_hidden)(params, xm)
-            h_sum = jax.lax.stop_gradient(h_all.sum(0))  # peers as data
-
-            def client_loss(p, x_i):
-                h_i = self._client_hidden(p, x_i)
-                # value == full exchanged sum; grad flows only through h_i
-                h = h_i + h_sum - jax.lax.stop_gradient(h_i)
-                return self._ce(self._rest(p, h), yb)
-
-            losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
-                params, xm)
-            params, opt_state, _ = jax.vmap(
-                lambda g, s, p: self.opt.update(g, s, p, step_idx))(
-                    grads, opt_state, params)
-            return params, opt_state, losses.mean()
-
-        def nonfed_step(params, opt_state, xb, yb, step_idx):
-            xm = xb[None] * masks[:, None, :]
-
-            def client_loss(p, x_i):
-                h_i = self._client_hidden(p, x_i)
-                return self._ce(self._rest(p, h_i), yb)
-
-            losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
-                params, xm)
-            params, opt_state, _ = jax.vmap(
-                lambda g, s, p: self.opt.update(g, s, p, step_idx))(
-                    grads, opt_state, params)
-            return params, opt_state, losses.mean()
-
-        def verticomb_step(params, opt_state, xb, yb, step_idx):
-            xm = xb[None] * masks[:, None, :]
-
-            def total_loss(ps):
-                h_all = jax.vmap(self._client_hidden)(ps, xm)
-                h_sum = h_all.sum(0)                    # grads flow to all
-                logits = jax.vmap(lambda p: self._rest(p, h_sum))(ps)
-                return jax.vmap(self._ce, in_axes=(0, None))(logits,
-                                                             yb).mean()
-
-            loss, grads = jax.value_and_grad(total_loss)(params)
-            params, opt_state, _ = jax.vmap(
-                lambda g, s, p: self.opt.update(g, s, p, step_idx))(
-                    grads, opt_state, params)
-            return params, opt_state, loss
-
-        step = {"devertifl": devertifl_step, "non_federated": nonfed_step,
-                "verticomb": verticomb_step}[mode]
-        self._step = jax.jit(step, donate_argnums=(0, 1))
-        self._fedavg = jax.jit(fedavg, donate_argnums=(0,))
+    def set_fedavg(self, fedavg_fn):
+        """Swap the aggregation function (e.g. weighted FedAvg) and
+        rebuild the jitted engines -- FedAvg is baked into the scan
+        round, so patching self._fedavg alone would not affect it."""
+        self._fedavg_fn = fedavg_fn
+        self._build_steps()
 
     # ------------------------------------------------------------------
     def predict(self, params, x):
-        xm = x[None] * self.masks[:, None, :]
-        h_all = jax.vmap(self._client_hidden)(params, xm)
-        if self.pcfg.mode in ("devertifl", "verticomb"):
-            h_all = hidden_output_exchange(h_all, differentiable=False)
-        logits = jax.vmap(self._rest)(params, h_all)    # [n, B, C]
-        return jnp.argmax(logits, axis=-1)              # per-client preds
+        return self._predict(params, jnp.asarray(x), self.masks)
 
     def evaluate(self, params):
-        preds = np.asarray(jax.jit(self.predict)(params,
-                                                 jnp.asarray(self.xte)))
+        preds = np.asarray(self.predict(params, self.xte))
         avg = "macro" if len(np.unique(self.ytr)) > 2 else "binary"
         f1s = [f1_score(self.yte, preds[i], average=avg)
                for i in range(self.pcfg.n_clients)]
@@ -179,33 +307,47 @@ class DeVertiFL:
                 "f1_per_client": f1s}
 
     # ------------------------------------------------------------------
-    def train(self, key=None, eval_every_round=True):
+    def _python_round(self, params, opt_state, step_idx, key):
+        """Pre-refactor reference engine: per-batch host dispatch of the
+        jitted step. Consumes the same device permutation stream as the
+        scan engine, so trajectories are identical."""
+        idx = np.asarray(self._perms(key))
+        losses = []
+        for b in range(idx.shape[0]):
+            params, opt_state, loss = self._step(
+                params, opt_state, self.masks,
+                self._xtr[idx[b]], self._ytr[idx[b]], step_idx)
+            step_idx = step_idx + 1
+            losses.append(loss)
+        if self.pcfg.fedavg and self.pcfg.mode != "non_federated":
+            params = self._fedavg(params)
+        return params, opt_state, step_idx, jnp.stack(losses)
+
+    def train(self, key=None, eval_every_round=True, engine=None):
         pcfg = self.pcfg
+        engine = engine or pcfg.engine
         key = key if key is not None else jax.random.PRNGKey(pcfg.seed)
-        params = self.init_params(key)
+        init_key, loop_key = train_keys(key)
+        params = self.init_params(init_key)
         opt_state = jax.vmap(self.opt.init)(params)
-        rng = np.random.default_rng(pcfg.seed)
-        n = len(self.xtr)
-        bs = min(pcfg.batch_size, n)
-        n_batches = n // bs
         step_idx = jnp.zeros((), jnp.int32)
         history = []
-        xtr = jnp.asarray(self.xtr)
-        ytr = jnp.asarray(self.ytr)
         for r in range(pcfg.rounds):
-            for e in range(pcfg.epochs):
-                order = rng.permutation(n)[:n_batches * bs]
-                for b in range(n_batches):
-                    idx = order[b * bs:(b + 1) * bs]
-                    params, opt_state, loss = self._step(
-                        params, opt_state, xtr[idx], ytr[idx], step_idx)
-                    step_idx = step_idx + 1
-            if pcfg.fedavg and pcfg.mode != "non_federated":
-                params = self._fedavg(params)
+            rkey = jax.random.fold_in(loop_key, r)
+            if engine == "scan":
+                params, opt_state, step_idx, losses = self._round(
+                    params, opt_state, step_idx, rkey,
+                    self._xtr, self._ytr, self.masks)
+            elif engine == "python":
+                params, opt_state, step_idx, losses = self._python_round(
+                    params, opt_state, step_idx, rkey)
+            else:
+                raise ValueError(f"unknown engine {engine!r}")
             if eval_every_round:
                 ev = self.evaluate(params)
                 ev["round"] = r
-                ev["loss"] = float(loss)
+                ev["loss"] = float(losses[-1])
+                ev["round_losses"] = np.asarray(losses)
                 history.append(ev)
         final = self.evaluate(params)
         return {"history": history, "final": final, "params": params}

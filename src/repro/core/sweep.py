@@ -1,0 +1,153 @@
+"""Seed-vmapped grid sweeps over De-VertiFL federations.
+
+Grid semantics
+--------------
+A sweep is the cartesian grid  datasets x modes x client_counts, and
+every grid **cell** is a *batch of federations*: one federation per
+seed, all trained simultaneously by ``jax.vmap`` over a leading seed
+axis of (params, opt_state, step_idx, round keys, data, masks).  Per
+cell there is exactly ONE compilation -- the jitted, vmapped round
+function from ``repro.core.protocol.make_round_fn`` -- reused for
+every round and every seed lane of that cell (the seed count is part
+of the traced shape, so a different number of seeds, like a different
+dataset/mode/n_clients, is a fresh compile).  Each seed lane is an
+independent federation end to end: its own synthetic dataset draw,
+its own vertical partition (independently random where the dataset's
+partitioner is seeded, i.e. titanic; the round-robin datasets
+partition identically at every seed), its own parameter init, its
+own epoch shuffles (all derived from ``PRNGKey(seed)`` exactly as
+``DeVertiFL.train`` derives them, so a sweep lane reproduces the
+corresponding standalone run bit-for-bit).
+
+``run_cell`` trains one cell and reports per-seed and mean/std F1/acc;
+``run_grid`` walks the whole grid -- reproducing the paper's
+Table-2-style comparison (devertifl vs. non_federated vs. verticomb)
+in one call -- and returns ``{"cells": {"ds/mode/n": {...}}}`` plus a
+per-(dataset, n_clients) mode comparison in ``"compare"``.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import partition as PT
+from repro.core.protocol import (ARCH_FOR, ProtocolConfig, make_predict_fn,
+                                 make_round_fn, train_keys)
+from repro.data import synthetic as SD
+from repro.metrics import accuracy, f1_score
+from repro.models.mlp_model import PaperMLP
+from repro.optim import adam
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    datasets: Sequence[str] = ("mnist", "fmnist", "titanic", "bank")
+    modes: Sequence[str] = ("devertifl", "non_federated", "verticomb")
+    client_counts: Sequence[int] = (2, 3, 5)
+    seeds: Sequence[int] = (0, 1, 2)
+    rounds: int = 5
+    epochs: int = 5
+    batch_size: int = 64
+    lr: float = 1e-3
+    exchange_at: int = -1
+    fedavg: bool = True
+    n_samples: Optional[int] = None     # dataset size override (speed)
+
+
+def _stacked_federations(dataset, n_clients, seeds, n_samples):
+    """Per-seed datasets, partitions and keys stacked on axis 0."""
+    xtr, ytr, xte, yte = (jnp.asarray(a) for a in SD.make_dataset_stack(
+        dataset, seeds, n=n_samples))
+    masks = jnp.asarray(PT.stacked_masks(dataset, xtr.shape[-1],
+                                         n_clients, seeds))
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    return xtr, ytr, xte, yte, masks, keys
+
+
+def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
+    """Train len(scfg.seeds) federations of one (dataset, mode,
+    n_clients) cell in a single vmapped computation."""
+    pcfg = ProtocolConfig(
+        dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
+        epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
+        exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
+        n_samples=scfg.n_samples)
+    model = PaperMLP(get_config(ARCH_FOR[dataset]))
+    opt = adam(pcfg.lr, max_grad_norm=None)
+
+    xtr, ytr, xte, yte, masks, keys = _stacked_federations(
+        dataset, n_clients, scfg.seeds, scfg.n_samples)
+    n_seeds, n_train = xtr.shape[0], xtr.shape[1]
+
+    def init_one(key):
+        init_key, loop_key = train_keys(key)
+        ks = jax.random.split(init_key, n_clients)
+        params = jax.vmap(model.init)(ks)
+        return params, jax.vmap(opt.init)(params), loop_key
+
+    params, opt_state, loop_keys = jax.jit(jax.vmap(init_one))(keys)
+
+    round_fn = make_round_fn(model, opt, pcfg, n_train)
+    vround = jax.jit(jax.vmap(round_fn), donate_argnums=(0, 1))
+    vpred = jax.jit(jax.vmap(make_predict_fn(model, pcfg)))
+    vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
+
+    step_idx = jnp.zeros((n_seeds,), jnp.int32)
+    # round 0 triggers the jit compile; time the steady-state rounds
+    # only (matching benchmarks/protocol_bench's warmed-up timings).
+    # With rounds == 1 the compile is unavoidably included.
+    t0 = time.perf_counter()
+    losses = None
+    timed_rounds = pcfg.rounds
+    for r in range(pcfg.rounds):
+        params, opt_state, step_idx, losses = vround(
+            params, opt_state, step_idx, vfold(loop_keys, r),
+            xtr, ytr, masks)
+        if r == 0 and pcfg.rounds > 1:
+            jax.block_until_ready(losses)
+            t0 = time.perf_counter()
+            timed_rounds = pcfg.rounds - 1
+    jax.block_until_ready(losses)
+    wall = time.perf_counter() - t0
+
+    preds = np.asarray(vpred(params, xte, masks))    # [S, n, B_test]
+    yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
+    f1s, accs = [], []
+    for s in range(n_seeds):
+        avg = "macro" if len(np.unique(ytr_np[s])) > 2 else "binary"
+        f1s.append(float(np.mean([f1_score(yte_np[s], preds[s, i], average=avg)
+                                  for i in range(n_clients)])))
+        accs.append(float(np.mean([accuracy(yte_np[s], preds[s, i])
+                                   for i in range(n_clients)])))
+    steps = timed_rounds * pcfg.epochs * (n_train // min(pcfg.batch_size,
+                                                         n_train))
+    return {
+        "dataset": dataset, "mode": mode, "n_clients": n_clients,
+        "seeds": list(scfg.seeds),
+        "f1_per_seed": f1s, "acc_per_seed": accs,
+        "f1_mean": float(np.mean(f1s)), "f1_std": float(np.std(f1s)),
+        "acc_mean": float(np.mean(accs)),
+        "final_loss_mean": float(np.asarray(losses)[:, -1].mean()),
+        "wall_s": wall,
+        "steps_per_sec": steps * n_seeds / max(wall, 1e-9),
+    }
+
+
+def run_grid(scfg: SweepConfig = SweepConfig()):
+    """Walk the full datasets x modes x client_counts grid.  Returns
+    {"cells": {key: cell}, "compare": {ds/n: {mode: f1_mean}}} where
+    key = "dataset/mode/n_clients"."""
+    cells, compare = {}, {}
+    for ds, mode, nc in itertools.product(scfg.datasets, scfg.modes,
+                                          scfg.client_counts):
+        cell = run_cell(ds, mode, nc, scfg)
+        cells[f"{ds}/{mode}/{nc}"] = cell
+        compare.setdefault(f"{ds}/{nc}", {})[mode] = cell["f1_mean"]
+    return {"cells": cells, "compare": compare}

@@ -96,3 +96,13 @@ def make_dataset(name, n=None, seed=None, test_frac=0.2):
     x, y = _GENS[name](**kw)
     n_test = int(len(x) * test_frac)
     return x[n_test:], y[n_test:], x[:n_test], y[:n_test]
+
+
+def make_dataset_stack(name, seeds, n=None, test_frac=0.2):
+    """Per-seed dataset draws stacked on a leading seed axis, for
+    seed-vmapped sweeps: (x_train, y_train, x_test, y_test), each
+    [n_seeds, ...]. Every seed is an independent draw of the same
+    (shape, cardinality) generator, so the stack is rectangular."""
+    splits = [make_dataset(name, n, seed=s, test_frac=test_frac)
+              for s in seeds]
+    return tuple(np.stack(parts) for parts in zip(*splits))

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.models import attention as A
 from repro.models import layers as L

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional test extra: pip install hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.exchange import fedavg, hidden_output_exchange
 from repro.core.partition import make_partition
