@@ -1,19 +1,31 @@
-"""Protocol engine throughput: per-batch Python-loop dispatch vs the
-fused lax.scan round (repro.core.protocol.make_round_fn), plus sweep
-throughput (seed-vmapped federations from repro.core.sweep).
+"""Protocol engine throughput across first-layer strategies: the
+paper-literal masked (zero-padded) scan, the slice-aware dynamic_slice
+scan, the vfl_matmul Pallas scan, and the per-batch Python-loop
+reference -- plus sweep throughput (seed-vmapped federations from
+repro.core.sweep).
 
-Emits benchmarks/results/BENCH_protocol.json so the perf trajectory is
-recorded across PRs:
+Appends one dated, git-SHA-keyed entry per run to
+benchmarks/results/BENCH_protocol.json (a list), so the perf
+trajectory accumulates across PRs instead of being overwritten:
 
-  {"loop_steps_per_sec": ..., "scan_steps_per_sec": ...,
-   "scan_speedup": ..., "sweep": {...}}
+  [{"date": ..., "git_sha": ..., "config": {...},
+    "engines": {"loop": sps, "masked": sps, "slice": sps,
+                "pallas": sps},
+    "slice_speedup_vs_masked": ..., "scan_speedup_vs_loop": ...,
+    "sweep": {...}}, ...]
+
+Pre-slice-engine entries (a single dict with loop/scan keys) are
+migrated into the list on first append.
 
 Run:  PYTHONPATH=src python -m benchmarks.protocol_bench
+Smoke (toy sizes, no file write): python -m benchmarks.run --smoke
 """
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import subprocess
 import time
 
 import jax
@@ -26,6 +38,37 @@ RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 # the paper's MNIST configuration, sized so one round is ~100 steps
 BENCH_CFG = dict(dataset="mnist", n_clients=3, epochs=2, n_samples=4000)
+SMOKE_CFG = dict(dataset="mnist", n_clients=3, epochs=1, n_samples=640)
+
+
+def _git_sha():
+    try:
+        return subprocess.check_output(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=os.path.dirname(__file__), text=True).strip()
+    except Exception:
+        return "unknown"
+
+
+def _append_entry(entry, path):
+    """Append-only trajectory: never clobber previous runs.  An
+    unreadable file is moved aside (.corrupt) rather than overwritten."""
+    data = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            data = old if isinstance(old, list) else [old]
+        except (json.JSONDecodeError, OSError):
+            backup = path + ".corrupt"
+            os.replace(path, backup)
+            print(f"warning: unreadable {path} moved to {backup}")
+    data.append(entry)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1)
+    os.replace(tmp, path)       # atomic: a crash never truncates history
+    return data
 
 
 def _bench_engine(fed, run_round, n_steps, iters=3):
@@ -44,45 +87,72 @@ def _bench_engine(fed, run_round, n_steps, iters=3):
     return iters * n_steps / (time.perf_counter() - t0)
 
 
-def run():
-    fed = DeVertiFL(ProtocolConfig(rounds=1, **BENCH_CFG))
+def run(smoke=False, results_path=None, iters=None):
+    """Bench all engine lanes.  smoke=True shrinks to toy sizes and
+    (unless results_path is given) skips the trajectory file write, so
+    it is safe inside tier-1 time budgets."""
+    cfg = SMOKE_CFG if smoke else BENCH_CFG
+    iters = iters if iters is not None else (1 if smoke else 3)
     _, lk = train_keys(jax.random.PRNGKey(0))
     rkey = jax.random.fold_in(lk, 0)
     si = jnp.zeros((), jnp.int32)
-    n_steps = fed.pcfg.epochs * fed.n_batches
 
-    scan = _bench_engine(
-        fed, lambda p, o: fed._round(p, o, si, rkey, fed._xtr, fed._ytr,
-                                     fed.masks), n_steps)
-    loop = _bench_engine(
-        fed, lambda p, o: fed._python_round(p, o, si, rkey), n_steps)
+    engines = {}
+    n_steps = None
+    for fl in ("masked", "slice", "pallas"):
+        fed = DeVertiFL(ProtocolConfig(rounds=1, first_layer=fl, **cfg))
+        n_steps = fed.pcfg.epochs * fed.n_batches
+        engines[fl] = _bench_engine(
+            fed, lambda p, o: fed._round(p, o, si, rkey, fed._xtr,
+                                         fed._ytr, fed._lay),
+            n_steps, iters=iters)
+        if fl == "masked":
+            engines["loop"] = _bench_engine(
+                fed, lambda p, o: fed._python_round(p, o, si, rkey),
+                n_steps, iters=iters)
 
-    sweep_cell = run_cell("mnist", "devertifl", 3,
-                          SweepConfig(seeds=(0, 1, 2, 3), rounds=2,
-                                      epochs=2, n_samples=2000))
-    report = {
-        "config": BENCH_CFG,
+    sweep_scfg = (SweepConfig(seeds=(0, 1), rounds=2, epochs=1,
+                              n_samples=512) if smoke else
+                  SweepConfig(seeds=(0, 1, 2, 3), rounds=2, epochs=2,
+                              n_samples=2000))
+    sweep_cell = run_cell("mnist", "devertifl", 3, sweep_scfg)
+
+    entry = {
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "git_sha": _git_sha(),
+        # on non-TPU backends the pallas lane times the interpreter,
+        # not the compiled kernel -- record the backend so trajectory
+        # entries from different machines stay comparable
+        "backend": jax.default_backend(),
+        "config": dict(cfg, smoke=smoke, iters=iters),
         "steps_per_round": n_steps,
-        "loop_steps_per_sec": loop,
-        "scan_steps_per_sec": scan,
-        "scan_speedup": scan / loop,
+        "engines": engines,
+        "slice_speedup_vs_masked": engines["slice"] / engines["masked"],
+        # same first layer on both sides: comparable with PR 1's
+        # scan_speedup trajectory entry
+        "scan_speedup_vs_loop": engines["masked"] / engines["loop"],
         "sweep": {
             "n_seeds": len(sweep_cell["seeds"]),
             "steps_per_sec": sweep_cell["steps_per_sec"],
             "wall_s": sweep_cell["wall_s"],
         },
     }
-    os.makedirs(RESULTS, exist_ok=True)
-    with open(os.path.join(RESULTS, "BENCH_protocol.json"), "w") as f:
-        json.dump(report, f, indent=1)
+    if results_path is None and not smoke:
+        os.makedirs(RESULTS, exist_ok=True)
+        results_path = os.path.join(RESULTS, "BENCH_protocol.json")
+    if results_path is not None:
+        _append_entry(entry, results_path)
 
-    return [
-        ("protocol/loop", 1e6 / loop, f"steps_per_sec={loop:.1f}"),
-        ("protocol/scan", 1e6 / scan, f"steps_per_sec={scan:.1f}"),
-        ("protocol/scan_speedup", 0.0, f"x{scan / loop:.2f}"),
-        ("protocol/sweep4seeds", sweep_cell["wall_s"] * 1e6,
+    rows = [(f"protocol/{name}", 1e6 / sps, f"steps_per_sec={sps:.1f}")
+            for name, sps in engines.items()]
+    rows += [
+        ("protocol/slice_vs_masked", 0.0,
+         f"x{entry['slice_speedup_vs_masked']:.2f}"),
+        ("protocol/sweep", sweep_cell["wall_s"] * 1e6,
          f"steps_per_sec={sweep_cell['steps_per_sec']:.1f}"),
     ]
+    return rows
 
 
 if __name__ == "__main__":

@@ -12,6 +12,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true",
                     help="full client range 2..10, 3 seeds (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="protocol_bench only, toy sizes, no result-file "
+                         "write -- fast perf-regression canary")
     ap.add_argument("--only", default=None,
                     help="comma list: figures,table2,kernels,roofline,"
                          "ablations,protocol")
@@ -19,12 +22,16 @@ def main() -> None:
     which = set((args.only or
                  "figures,table2,kernels,roofline,ablations,protocol"
                  ).split(","))
+    if args.smoke:
+        if args.only:
+            ap.error("--smoke runs only the protocol lane; drop --only")
+        which = {"protocol"}
 
     rows = []
     t0 = time.time()
     if "protocol" in which:
         from benchmarks import protocol_bench
-        rows += protocol_bench.run()
+        rows += protocol_bench.run(smoke=args.smoke)
     if "kernels" in which:
         from benchmarks import kernels_bench
         rows += kernels_bench.run()

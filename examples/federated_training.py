@@ -38,7 +38,8 @@ def run_sweep(args, common):
     print(f"De-VertiFL sweep: {args.clients} clients, {args.dataset}, "
           f"{args.rounds} rounds x {args.epochs} epochs, seeds {seeds}")
     scfg = SweepConfig(seeds=seeds, rounds=args.rounds,
-                       epochs=args.epochs, n_samples=common["n_samples"])
+                       epochs=args.epochs, n_samples=common["n_samples"],
+                       first_layer=common["first_layer"])
     fed = run_cell(args.dataset, "devertifl", args.clients, scfg)
     non = run_cell(args.dataset, "non_federated", args.clients, scfg)
     for name, cell in (("devertifl", fed), ("non-federated", non)):
@@ -60,6 +61,12 @@ def main():
                     choices=["scan", "python"],
                     help="scan = fused lax.scan rounds (default); "
                          "python = per-batch reference loop")
+    ap.add_argument("--first-layer", default="auto",
+                    choices=["auto", "pallas", "slice", "masked"],
+                    help="first-layer strategy: slice/pallas read only "
+                         "each client's contiguous feature slice; masked "
+                         "is the paper-literal zero-padding reference; "
+                         "auto = pallas on TPU, slice elsewhere")
     ap.add_argument("--seeds", type=int, default=1,
                     help=">1 runs the vmapped multi-seed sweep")
     args = ap.parse_args()
@@ -69,7 +76,8 @@ def main():
 
     n = 6000 if args.dataset in ("mnist", "fmnist") else None
     common = dict(dataset=args.dataset, n_clients=args.clients,
-                  rounds=args.rounds, epochs=args.epochs, n_samples=n)
+                  rounds=args.rounds, epochs=args.epochs, n_samples=n,
+                  first_layer=args.first_layer)
 
     if args.seeds > 1:
         fed_f1, non_f1 = run_sweep(args, common)

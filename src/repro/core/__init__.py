@@ -9,5 +9,6 @@ from repro.core.protocol import (  # noqa: F401
 from repro.core.sweep import SweepConfig, run_cell, run_grid  # noqa: F401
 from repro.core.exchange import hidden_output_exchange  # noqa: F401
 from repro.core.partition import (  # noqa: F401
-    make_partition, masks_for, stacked_masks,
+    Layout, LayoutArrays, canonicalize, make_layout, make_partition,
+    masks_for,
 )

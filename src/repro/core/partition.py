@@ -1,7 +1,38 @@
-"""Vertical partitioning (Algorithm 1 line 3): distribute dataset
-features across participants. Image datasets are dealt row-by-row
-round-robin (Fig. 2); tabular datasets round-robin or random."""
+"""Vertical partitioning (Algorithm 1 line 3) and the canonical
+slice-aware layout the protocol engine trains on.
+
+Partitioning distributes dataset features across participants: image
+datasets are dealt row-by-row round-robin (Fig. 2); tabular datasets
+round-robin or random.
+
+The column-permutation trick
+----------------------------
+The paper's zero-padding makes every client's first-layer matmul
+full-width: zeropad(x_local) @ W touches all F rows of W even though
+only F_i of them meet non-zero inputs.  ``canonicalize`` removes that
+waste *once at setup* instead of on every step: it permutes the dataset
+columns so client i owns the contiguous slice ``[offset_i, offset_i +
+F_i)`` of the reordered feature axis.  Reordering columns of x while
+keeping W's row init order is semantics-preserving -- the first layer
+is a sum over feature columns, and which physical column a feature
+lives in is arbitrary -- so random partitions (titanic) remain the same
+experiment, just expressed in an engine-friendly order.  The recorded
+``perm`` maps canonical column j back to original feature ``perm[j]``,
+and ``Layout.apply`` re-expresses any raw [..., F] array in canonical
+order.
+
+On the canonical layout the zero-padding masks become contiguous slabs,
+the XLA engine path can ``dynamic_slice`` instead of masking, and the
+``vfl_matmul`` Pallas kernel can walk only the client's weight-row
+blocks.  ``Layout.block`` is the largest block size (capped at 128)
+that divides every slice size -- and therefore every offset -- so all
+slices are block-aligned for the kernel's BlockSpec index_map.
+"""
 from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence, Tuple
 
 import numpy as np
 
@@ -24,12 +55,95 @@ def masks_for(partition, n_features, dtype=np.float32):
                      for idx in partition])
 
 
-def stacked_masks(dataset, n_features, n_clients, seeds, dtype=np.float32):
-    """[n_seeds, n_clients, n_features] masks -- one vertical partition
-    per seed, for seed-vmapped sweeps. Only seeded partitioners
-    (titanic's random_features) actually vary across seeds; the
-    round-robin datasets yield the same partition in every lane."""
-    return np.stack([
-        masks_for(make_partition(dataset, n_features, n_clients, seed=s),
-                  n_features, dtype)
-        for s in seeds])
+# ---------------------------------------------------------------------------
+# canonical slice-aware layout
+# ---------------------------------------------------------------------------
+class LayoutArrays(NamedTuple):
+    """The device-array view of a Layout, threaded through the jitted
+    step/round/predict functions (and vmapped over a seed axis by
+    repro.core.sweep, exactly like masks used to be):
+
+      masks    [n_clients, n_features] contiguous-slab zeropad masks
+               (canonical column order) -- the masked reference path
+      offsets  [n_clients] int32 slice starts -- the dynamic_slice path
+    """
+    masks: object
+    offsets: object
+
+
+@dataclass(frozen=True, eq=False)
+class Layout:
+    """Canonical block-aligned feature layout for one federation.
+
+    partition   per-client ORIGINAL feature ids (what each client owns)
+    perm        [F] canonical column j holds original feature perm[j]
+    inv_perm    [F] original feature f lives at canonical column
+                inv_perm[f]
+    offsets     per-client canonical slice starts (python ints: static
+                under jit, usable in Pallas BlockSpec index_maps)
+    sizes       per-client slice lengths F_i
+    block       largest bk <= 128 dividing every size (hence offset)
+    """
+    partition: Tuple[np.ndarray, ...]
+    perm: np.ndarray
+    inv_perm: np.ndarray
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    block: int
+    n_features: int
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.sizes)
+
+    def apply(self, x):
+        """Re-express raw [..., F] data in canonical column order."""
+        return x[..., self.perm]
+
+    def masks(self, dtype=np.float32):
+        """Contiguous-slab zeropad masks in canonical column order."""
+        m = np.zeros((self.n_clients, self.n_features), dtype)
+        for i, (off, sz) in enumerate(zip(self.offsets, self.sizes)):
+            m[i, off:off + sz] = 1
+        return m
+
+    def arrays(self) -> LayoutArrays:
+        import jax.numpy as jnp
+        return LayoutArrays(masks=jnp.asarray(self.masks()),
+                            offsets=jnp.asarray(self.offsets, jnp.int32))
+
+
+def _block_of(sizes: Sequence[int], cap: int = 128) -> int:
+    g = 0
+    for s in sizes:
+        g = math.gcd(g, int(s))
+    if g == 0:
+        return 1
+    return max(d for d in range(1, min(g, cap) + 1) if g % d == 0)
+
+
+def canonicalize(partition, n_features: int) -> Layout:
+    """Build the canonical contiguous layout for a partition: column j
+    of the canonical order is original feature ``perm[j]``, client i's
+    features occupy ``[offset_i, offset_i + F_i)``."""
+    parts = tuple(np.asarray(p) for p in partition)
+    perm = np.concatenate(parts).astype(np.int64)
+    if perm.size != n_features or np.unique(perm).size != n_features:
+        raise ValueError("partition must be disjoint and cover all "
+                         f"{n_features} features (got {perm.size} ids, "
+                         f"{np.unique(perm).size} unique)")
+    inv_perm = np.empty_like(perm)
+    inv_perm[perm] = np.arange(n_features)
+    sizes = tuple(int(len(p)) for p in parts)
+    offsets = tuple(int(o) for o in
+                    np.concatenate([[0], np.cumsum(sizes)[:-1]]))
+    return Layout(partition=parts, perm=perm, inv_perm=inv_perm,
+                  offsets=offsets, sizes=sizes,
+                  block=_block_of(sizes), n_features=n_features)
+
+
+def make_layout(dataset: str, n_features: int, n_clients: int,
+                seed=0) -> Layout:
+    """Partition + canonicalize in one call."""
+    return canonicalize(make_partition(dataset, n_features, n_clients,
+                                       seed=seed), n_features)

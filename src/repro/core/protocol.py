@@ -12,6 +12,7 @@ Engine layout
 The protocol is factored into pure functions so the whole federation
 can be jitted, scanned, and vmapped:
 
+  * make_first_layer_fn  the slice-aware first layer (see below)
   * make_step_fn      one optimizer step for all clients (mode-specific)
   * make_perm_fn      device-side epoch shuffles (jax.random.permutation)
   * make_round_fn     a full round -- epochs x batches as ONE lax.scan
@@ -19,14 +20,39 @@ can be jitted, scanned, and vmapped:
                       a single XLA executable with no host round-trips
   * make_predict_fn   per-client inference with the evaluation exchange
 
+Slice-aware first layer
+~~~~~~~~~~~~~~~~~~~~~~~
+Every federation trains on the canonical column layout from
+``repro.core.partition.canonicalize``: dataset columns are permuted
+once at setup so client i owns the contiguous block-aligned feature
+slice [offset_i, offset_i + F_i).  The step/round/predict functions
+take a ``LayoutArrays(masks, offsets)`` argument (vmappable over a
+seed axis, like masks were before), and ``ProtocolConfig.first_layer``
+selects how layer 0 is computed:
+
+  masked   the paper-literal reference: materialize the [n, B, F]
+           zero-padded batch and run dense full-width matmuls.  Kept
+           bit-for-bit as the reference path.
+  slice    x[:, off:off+F_i] @ W[off:off+F_i] per client via XLA
+           dynamic_slice -- no padding is materialized and the MXU/ALU
+           work drops by ~(n-1)/n on layer 0.  Gradients scatter back
+           into the client's W-row block; rows outside the slice get
+           the same exact-zero gradient the masked path produces.
+  pallas   the block-sparse ``vfl_matmul`` Pallas kernel (with its
+           custom VJP) walking only the client's weight-row blocks --
+           the TPU path; on CPU it runs in interpret mode.
+  auto     pallas on TPU, slice elsewhere (the default).
+
+masked and slice/pallas differ only in float reduction order, so
+loss/F1 trajectories agree to allclose rather than bitwise
+(tests/test_slice_engine.py pins this).
+
 ``DeVertiFL.train`` drives make_round_fn under jit (engine="scan", the
 default). A per-batch host-dispatched loop is retained as
-engine="python" (the pre-refactor execution strategy, but on the new
-key derivation: device permutations instead of the old host-side
-numpy shuffles, so fixed-seed numbers differ from the seed commit).
-Both engines consume the identical device-generated permutation
-stream, so their loss/F1 trajectories match bit-for-bit at a fixed
-seed (tests/test_engine.py asserts this). repro.core.sweep vmaps
+engine="python" (same jitted step, host-side batch dispatch). Both
+engines consume the identical device-generated permutation stream, so
+their loss/F1 trajectories match bit-for-bit at a fixed seed
+(tests/test_engine.py asserts this). repro.core.sweep vmaps
 make_round_fn over seeds for grid experiments.
 """
 from __future__ import annotations
@@ -34,7 +60,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +70,7 @@ from repro.configs import get_config
 from repro.core import partition as PT
 from repro.core.exchange import fedavg, hidden_output_exchange
 from repro.data import synthetic as SD
+from repro.kernels.vfl_matmul import vfl_matmul
 from repro.metrics import accuracy, f1_score
 from repro.models.mlp_model import PaperMLP
 from repro.optim import adam
@@ -68,6 +95,7 @@ class ProtocolConfig:
     seed: int = 0
     n_samples: Optional[int] = None     # dataset size override (speed)
     engine: str = "scan"                # scan | python (reference loop)
+    first_layer: str = "auto"           # auto | pallas | slice | masked
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -75,6 +103,20 @@ class ProtocolConfig:
 
 ARCH_FOR = {"mnist": "paper-mlp-mnist", "fmnist": "paper-mlp-fmnist",
             "titanic": "paper-mlp-titanic", "bank": "paper-mlp-bank"}
+
+
+def resolve_first_layer(pcfg) -> str:
+    """Map the first_layer knob to a concrete path for this backend."""
+    fl = pcfg.first_layer
+    if fl == "auto":
+        fl = "pallas" if jax.default_backend() == "tpu" else "slice"
+    if fl not in ("masked", "slice", "pallas"):
+        raise ValueError(f"unknown first_layer {pcfg.first_layer!r}")
+    if pcfg.exchange_at == 0 and fl != "masked":
+        # exchanging the raw zero-padded input predates layer 0; only
+        # the masked formulation expresses it
+        fl = "masked"
+    return fl
 
 
 # ---------------------------------------------------------------------------
@@ -85,6 +127,14 @@ def client_hidden(model, exchange_at, p, xm):
     if exchange_at == -1:
         return model.head(p, model.forward_hidden(p, xm))
     return model.forward_hidden(p, xm, upto=exchange_at)
+
+
+def client_hidden_from(model, exchange_at, p, h1):
+    """client_hidden, but starting from the post-ReLU layer-0 output
+    (the slice-aware first-layer paths compute layer 0 themselves)."""
+    if exchange_at == -1:
+        return model.head(p, model.forward_from(p, h1, start=1))
+    return model.forward_from(p, h1, start=1, upto=exchange_at)
 
 
 def rest(model, exchange_at, p, h):
@@ -102,71 +152,196 @@ def _ce(logits, labels):
     return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
 
 
-def make_step_fn(model, opt, pcfg):
+def make_first_layer_fn(model, pcfg, layout, interpret=None):
+    """first(params, xb, lay) -> [n_clients, B, H] post-ReLU layer-0
+    activations.  xb is the canonical-order [B, F] batch; lay is the
+    LayoutArrays view (lay.offsets is traced -- sweeps vmap it); the
+    static slice sizes (and, for pallas, static offsets and block size)
+    come from ``layout``.
+
+    CAVEAT (pallas): the Pallas BlockSpec index_map needs *static*
+    offsets, so first_pallas closes over ``layout.offsets`` and
+    ignores the runtime ``lay.offsets``.  Callers must pass
+    LayoutArrays derived from the same canonical Layout (canonical
+    offsets are deterministic per (dataset, n_clients), and
+    sweep._stacked_federations raises if lanes ever disagreed); a
+    scalar-prefetch offset is the ROADMAP item that would lift this."""
+    fl = resolve_first_layer(pcfg)
+    # the masked reference keeps its whole-forward formulation inline in
+    # make_step_fn / make_predict_fn; only the slice-aware paths split
+    # the first layer out
+    assert fl in ("slice", "pallas"), fl
+    assert layout is not None, f"first_layer={fl!r} needs a Layout"
+    sizes = layout.sizes
+
+    if fl == "slice":
+        def first_slice(params, xb, lay):
+            w = params["layer_0"]["kernel"]     # [n, F, H]
+            b = params["layer_0"]["bias"]       # [n, H]
+            outs = []
+            for i, f_i in enumerate(sizes):
+                x_i = jax.lax.dynamic_slice(
+                    xb, (0, lay.offsets[i]), (xb.shape[0], f_i))
+                w_i = jax.lax.dynamic_slice(
+                    w[i], (lay.offsets[i], 0), (f_i, w.shape[-1]))
+                outs.append(jax.nn.relu(x_i @ w_i + b[i]))
+            return jnp.stack(outs)
+        return first_slice
+
+    # pallas: BlockSpec index_maps need static offsets; the canonical
+    # layout's offsets are deterministic per (dataset, n_clients), so
+    # closing over them is safe even in seed-vmapped sweeps.
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    offsets, bk = layout.offsets, layout.block
+
+    def first_pallas(params, xb, lay):
+        w = params["layer_0"]["kernel"]
+        b = params["layer_0"]["bias"]
+        outs = []
+        for i, (off, f_i) in enumerate(zip(offsets, sizes)):
+            x_i = jax.lax.slice_in_dim(xb, off, off + f_i, axis=1)
+            y = vfl_matmul(x_i, w[i], off, bk=bk, interpret=interpret)
+            outs.append(jax.nn.relu(y + b[i]))
+        return jnp.stack(outs)
+    return first_pallas
+
+
+def make_step_fn(model, opt, pcfg, layout=None):
     """One all-clients optimizer step for pcfg.mode.
 
-    Signature: step(params, opt_state, masks, xb, yb, step_idx)
-      -> (params, opt_state, mean_loss).  masks is an argument (not a
-    closure) so sweeps can vmap it over per-seed partitions.
+    Signature: step(params, opt_state, lay, xb, yb, step_idx)
+      -> (params, opt_state, mean_loss).  lay is a LayoutArrays
+    argument (not a closure) so sweeps can vmap it over per-seed
+    partitions; xb is in canonical column order.
     """
+    fl = resolve_first_layer(pcfg)
     hidden = partial(client_hidden, model, pcfg.exchange_at)
     through = partial(rest, model, pcfg.exchange_at)
 
-    def devertifl_step(params, opt_state, masks, xb, yb, step_idx):
-        xm = xb[None] * masks[:, None, :]           # [n, B, F] zeropad
-        h_all = jax.vmap(hidden)(params, xm)
-        h_sum = jax.lax.stop_gradient(h_all.sum(0))  # peers as data
-
-        def client_loss(p, x_i):
-            h_i = hidden(p, x_i)
-            # value == full exchanged sum; grad flows only through h_i
-            h = h_i + h_sum - jax.lax.stop_gradient(h_i)
-            return _ce(through(p, h), yb)
-
-        losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
-            params, xm)
+    def update(params, opt_state, grads, step_idx):
         params, opt_state, _ = jax.vmap(
             lambda g, s, p: opt.update(g, s, p, step_idx))(
                 grads, opt_state, params)
-        return params, opt_state, losses.mean()
+        return params, opt_state
 
-    def nonfed_step(params, opt_state, masks, xb, yb, step_idx):
-        xm = xb[None] * masks[:, None, :]
+    if fl == "masked":
+        # the paper-literal reference: whole-forward from the
+        # materialized [n, B, F] zero-padded batch, per-client
+        # value_and_grad -- kept exactly as the pre-slice engine
+        def devertifl_step(params, opt_state, lay, xb, yb, step_idx):
+            xm = xb[None] * lay.masks[:, None, :]   # [n, B, F] zeropad
+            h_all = jax.vmap(hidden)(params, xm)
+            h_sum = jax.lax.stop_gradient(h_all.sum(0))  # peers as data
 
-        def client_loss(p, x_i):
-            h_i = hidden(p, x_i)
-            return _ce(through(p, h_i), yb)
+            def client_loss(p, x_i):
+                h_i = hidden(p, x_i)
+                # value == full exchanged sum; grad flows only through h_i
+                h = h_i + h_sum - jax.lax.stop_gradient(h_i)
+                return _ce(through(p, h), yb)
 
-        losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
-            params, xm)
-        params, opt_state, _ = jax.vmap(
-            lambda g, s, p: opt.update(g, s, p, step_idx))(
-                grads, opt_state, params)
-        return params, opt_state, losses.mean()
+            losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
+                params, xm)
+            params, opt_state = update(params, opt_state, grads, step_idx)
+            return params, opt_state, losses.mean()
 
-    def verticomb_step(params, opt_state, masks, xb, yb, step_idx):
-        xm = xb[None] * masks[:, None, :]
+        def nonfed_step(params, opt_state, lay, xb, yb, step_idx):
+            xm = xb[None] * lay.masks[:, None, :]
 
-        def total_loss(ps):
-            h_all = jax.vmap(hidden)(ps, xm)
-            h_sum = h_all.sum(0)                    # grads flow to all
-            logits = jax.vmap(lambda p: through(p, h_sum))(ps)
-            return jax.vmap(_ce, in_axes=(0, None))(logits, yb).mean()
+            def client_loss(p, x_i):
+                h_i = hidden(p, x_i)
+                return _ce(through(p, h_i), yb)
 
-        loss, grads = jax.value_and_grad(total_loss)(params)
-        params, opt_state, _ = jax.vmap(
-            lambda g, s, p: opt.update(g, s, p, step_idx))(
-                grads, opt_state, params)
-        return params, opt_state, loss
+            losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
+                params, xm)
+            params, opt_state = update(params, opt_state, grads, step_idx)
+            return params, opt_state, losses.mean()
+
+        def verticomb_step(params, opt_state, lay, xb, yb, step_idx):
+            xm = xb[None] * lay.masks[:, None, :]
+
+            def total_loss(ps):
+                h_all = jax.vmap(hidden)(ps, xm)
+                h_sum = h_all.sum(0)                # grads flow to all
+                logits = jax.vmap(lambda p: through(p, h_sum))(ps)
+                return jax.vmap(_ce, in_axes=(0, None))(logits, yb).mean()
+
+            loss, grads = jax.value_and_grad(total_loss)(params)
+            params, opt_state = update(params, opt_state, grads, step_idx)
+            return params, opt_state, loss
+
+    else:
+        # slice/pallas: layer 0 reads only the client's feature slice;
+        # per-client grads come from grad(sum of per-client losses) --
+        # loss_i depends on params[i] alone (peer terms are
+        # stop-gradient'ed), so the stacked gradient IS the per-client
+        # gradient stack
+        first = make_first_layer_fn(model, pcfg, layout)
+        hidden_from = partial(client_hidden_from, model, pcfg.exchange_at)
+
+        def losses_fn(ps, lay, xb, yb, differentiable=None):
+            h1 = first(ps, xb, lay)
+            h_all = jax.vmap(hidden_from)(ps, h1)
+            if differentiable is not None:
+                h_all = hidden_output_exchange(
+                    h_all, differentiable=differentiable)
+            logits = jax.vmap(through)(ps, h_all)
+            return jax.vmap(_ce, in_axes=(0, None))(logits, yb)   # [n]
+
+        def devertifl_step(params, opt_state, lay, xb, yb, step_idx):
+            def total(ps):
+                losses = losses_fn(ps, lay, xb, yb, differentiable=False)
+                return losses.sum(), losses
+
+            grads, losses = jax.grad(total, has_aux=True)(params)
+            params, opt_state = update(params, opt_state, grads, step_idx)
+            return params, opt_state, losses.mean()
+
+        def nonfed_step(params, opt_state, lay, xb, yb, step_idx):
+            def total(ps):
+                losses = losses_fn(ps, lay, xb, yb)
+                return losses.sum(), losses
+
+            grads, losses = jax.grad(total, has_aux=True)(params)
+            params, opt_state = update(params, opt_state, grads, step_idx)
+            return params, opt_state, losses.mean()
+
+        def verticomb_step(params, opt_state, lay, xb, yb, step_idx):
+            def total(ps):
+                return losses_fn(ps, lay, xb, yb,
+                                 differentiable=True).mean()
+
+            loss, grads = jax.value_and_grad(total)(params)
+            params, opt_state = update(params, opt_state, grads, step_idx)
+            return params, opt_state, loss
 
     return {"devertifl": devertifl_step, "non_federated": nonfed_step,
             "verticomb": verticomb_step}[pcfg.mode]
 
 
-def make_perm_fn(pcfg, n_train):
+class PermPlan(NamedTuple):
+    """Epoch-shuffle plan from make_perm_fn.  n_dropped documents the
+    silent tail drop: each epoch uses n_batches * batch_size samples,
+    so the trailing ``n_train % batch_size`` samples of every epoch's
+    permutation are discarded (a fresh permutation each epoch means a
+    *different* random subset is dropped every epoch, so no sample is
+    systematically excluded)."""
+    perms: object          # perms(round_key) -> [epochs*n_batches, bs]
+    n_batches: int
+    batch_size: int
+    n_dropped: int         # per-epoch discarded tail = n_train % bs
+
+
+def make_perm_fn(pcfg, n_train) -> PermPlan:
     """Device-side epoch shuffles: perms(round_key) -> [epochs * n_batches,
     batch_size] int32 batch indices, one independent permutation per
-    epoch.  Returns (perm_fn, n_batches, batch_size)."""
+    epoch.
+
+    NOTE the tail-drop semantics: n_batches = n_train // batch_size, so
+    the last ``n_train % batch_size`` indices of each epoch permutation
+    are dropped (PermPlan.n_dropped).  This matches the common
+    drop-last DataLoader behavior and keeps every scanned batch the
+    same static shape."""
     bs = min(pcfg.batch_size, n_train)
     n_batches = n_train // bs
 
@@ -177,35 +352,36 @@ def make_perm_fn(pcfg, n_train):
         return order[:, :n_batches * bs].reshape(
             pcfg.epochs * n_batches, bs)
 
-    return perms, n_batches, bs
+    return PermPlan(perms, n_batches, bs, n_train - n_batches * bs)
 
 
-def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None):
+def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None):
     """One De-VertiFL round as a single jittable function: generate the
     epoch permutations on device, lax.scan the step over every batch of
     every epoch (step_idx carried in the scan), then apply the P2P
     FedAvg (Algorithm 1 lines 16-19) to the carry-out parameters.
 
     Signature: round_fn(params, opt_state, step_idx, key, xtr, ytr,
-    masks) -> (params, opt_state, step_idx, losses[epochs*n_batches]).
-    Data and masks are arguments so a sweep can vmap the whole round
-    over a leading seed axis. fedavg_fn overrides the uniform-mean
-    aggregation (e.g. the weighted-FedAvg ablation); it is baked into
-    the jitted round, so pass it here rather than patching afterwards.
+    lay) -> (params, opt_state, step_idx, losses[epochs*n_batches]).
+    Data (canonical column order) and the LayoutArrays are arguments so
+    a sweep can vmap the whole round over a leading seed axis.
+    fedavg_fn overrides the uniform-mean aggregation (e.g. the
+    weighted-FedAvg ablation); it is baked into the jitted round, so
+    pass it here rather than patching afterwards.
     """
-    step = make_step_fn(model, opt, pcfg)
-    perm_fn, _, _ = make_perm_fn(pcfg, n_train)
+    step = make_step_fn(model, opt, pcfg, layout=layout)
+    perm_fn = make_perm_fn(pcfg, n_train).perms
     do_fedavg = pcfg.fedavg and pcfg.mode != "non_federated"
     fedavg_fn = fedavg_fn or fedavg
 
-    def round_fn(params, opt_state, step_idx, key, xtr, ytr, masks):
+    def round_fn(params, opt_state, step_idx, key, xtr, ytr, lay):
         idx = perm_fn(key)
 
         def body(carry, batch_idx):
             params, opt_state, step_idx = carry
             xb = jnp.take(xtr, batch_idx, axis=0)
             yb = jnp.take(ytr, batch_idx, axis=0)
-            params, opt_state, loss = step(params, opt_state, masks,
+            params, opt_state, loss = step(params, opt_state, lay,
                                            xb, yb, step_idx)
             return (params, opt_state, step_idx + 1), loss
 
@@ -218,14 +394,27 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None):
     return round_fn
 
 
-def make_predict_fn(model, pcfg):
-    """predict(params, x, masks) -> [n_clients, B] class predictions."""
-    hidden = partial(client_hidden, model, pcfg.exchange_at)
+def make_predict_fn(model, pcfg, layout=None):
+    """predict(params, x, lay) -> [n_clients, B] class predictions.
+    x is in canonical column order (Layout.apply)."""
+    fl = resolve_first_layer(pcfg)
     through = partial(rest, model, pcfg.exchange_at)
 
-    def predict(params, x, masks):
-        xm = x[None] * masks[:, None, :]
-        h_all = jax.vmap(hidden)(params, xm)
+    if fl == "masked":
+        hidden = partial(client_hidden, model, pcfg.exchange_at)
+
+        def h_all_fn(params, x, lay):
+            xm = x[None] * lay.masks[:, None, :]
+            return jax.vmap(hidden)(params, xm)
+    else:
+        first = make_first_layer_fn(model, pcfg, layout)
+        hidden_from = partial(client_hidden_from, model, pcfg.exchange_at)
+
+        def h_all_fn(params, x, lay):
+            return jax.vmap(hidden_from)(params, first(params, x, lay))
+
+    def predict(params, x, lay):
+        h_all = h_all_fn(params, x, lay)
         if pcfg.mode in ("devertifl", "verticomb"):
             h_all = hidden_output_exchange(h_all, differentiable=False)
         logits = jax.vmap(through)(params, h_all)   # [n, B, C]
@@ -244,7 +433,12 @@ def train_keys(key):
 
 # ---------------------------------------------------------------------------
 class DeVertiFL:
-    """One federation instance: model, partition, per-client params."""
+    """One federation instance: model, partition, per-client params.
+
+    Data is held in the canonical column order of ``self.layout``
+    internally; ``predict`` accepts raw (original-column-order) inputs
+    and re-expresses them itself.
+    """
 
     def __init__(self, pcfg: ProtocolConfig, fedavg_fn=None):
         self.pcfg = pcfg
@@ -254,13 +448,19 @@ class DeVertiFL:
         xtr, ytr, xte, yte = SD.make_dataset(pcfg.dataset, pcfg.n_samples,
                                              seed=pcfg.seed)
         self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
-        self._xtr = jnp.asarray(xtr)
-        self._ytr = jnp.asarray(ytr)
         self.n_features = self.model.in_features
-        part = PT.make_partition(pcfg.dataset, self.n_features,
-                                 pcfg.n_clients, seed=pcfg.seed)
-        self.partition = part
-        self.masks = jnp.asarray(PT.masks_for(part, self.n_features))
+        self.layout = PT.make_layout(pcfg.dataset, self.n_features,
+                                     pcfg.n_clients, seed=pcfg.seed)
+        self.partition = self.layout.partition
+        self._lay = self.layout.arrays()
+        # public masks stay in RAW column order so they compose with the
+        # public raw-order xtr/xte (fed.xte * fed.masks[i] is the
+        # paper's client view); the engine uses the canonical _lay
+        self.masks = jnp.asarray(PT.masks_for(self.partition,
+                                              self.n_features))
+        self._xtr = jnp.asarray(self.layout.apply(xtr))
+        self._xte = jnp.asarray(self.layout.apply(xte))
+        self._ytr = jnp.asarray(ytr)
         self.opt = adam(pcfg.lr, max_grad_norm=None)
         self._build_steps()
 
@@ -274,16 +474,19 @@ class DeVertiFL:
         pcfg = self.pcfg
         n_train = len(self.xtr)
         fa = self._fedavg_fn or fedavg
-        self._step = jax.jit(make_step_fn(self.model, self.opt, pcfg),
-                             donate_argnums=(0, 1))
-        perm_fn, self.n_batches, self.bs = make_perm_fn(pcfg, n_train)
-        self._perms = jax.jit(perm_fn)
+        self._step = jax.jit(
+            make_step_fn(self.model, self.opt, pcfg, layout=self.layout),
+            donate_argnums=(0, 1))
+        plan = make_perm_fn(pcfg, n_train)
+        self.n_batches, self.bs = plan.n_batches, plan.batch_size
+        self._perms = jax.jit(plan.perms)
         self._round = jax.jit(
             make_round_fn(self.model, self.opt, pcfg, n_train,
-                          fedavg_fn=fa),
+                          fedavg_fn=fa, layout=self.layout),
             donate_argnums=(0, 1))
         self._fedavg = jax.jit(fa, donate_argnums=(0,))
-        self._predict = jax.jit(make_predict_fn(self.model, pcfg))
+        self._predict = jax.jit(
+            make_predict_fn(self.model, pcfg, layout=self.layout))
 
     def set_fedavg(self, fedavg_fn):
         """Swap the aggregation function (e.g. weighted FedAvg) and
@@ -294,10 +497,13 @@ class DeVertiFL:
 
     # ------------------------------------------------------------------
     def predict(self, params, x):
-        return self._predict(params, jnp.asarray(x), self.masks)
+        xc = jnp.asarray(self.layout.apply(np.asarray(x)))
+        return self._predict(params, xc, self._lay)
 
     def evaluate(self, params):
-        preds = np.asarray(self.predict(params, self.xte))
+        # the test set is already cached in canonical order; skip
+        # predict()'s per-call permutation of raw inputs
+        preds = np.asarray(self._predict(params, self._xte, self._lay))
         avg = "macro" if len(np.unique(self.ytr)) > 2 else "binary"
         f1s = [f1_score(self.yte, preds[i], average=avg)
                for i in range(self.pcfg.n_clients)]
@@ -315,7 +521,7 @@ class DeVertiFL:
         losses = []
         for b in range(idx.shape[0]):
             params, opt_state, loss = self._step(
-                params, opt_state, self.masks,
+                params, opt_state, self._lay,
                 self._xtr[idx[b]], self._ytr[idx[b]], step_idx)
             step_idx = step_idx + 1
             losses.append(loss)
@@ -337,7 +543,7 @@ class DeVertiFL:
             if engine == "scan":
                 params, opt_state, step_idx, losses = self._round(
                     params, opt_state, step_idx, rkey,
-                    self._xtr, self._ytr, self.masks)
+                    self._xtr, self._ytr, self._lay)
             elif engine == "python":
                 params, opt_state, step_idx, losses = self._python_round(
                     params, opt_state, step_idx, rkey)

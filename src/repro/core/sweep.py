@@ -5,7 +5,7 @@ Grid semantics
 A sweep is the cartesian grid  datasets x modes x client_counts, and
 every grid **cell** is a *batch of federations*: one federation per
 seed, all trained simultaneously by ``jax.vmap`` over a leading seed
-axis of (params, opt_state, step_idx, round keys, data, masks).  Per
+axis of (params, opt_state, step_idx, round keys, data, layout).  Per
 cell there is exactly ONE compilation -- the jitted, vmapped round
 function from ``repro.core.protocol.make_round_fn`` -- reused for
 every round and every seed lane of that cell (the seed count is part
@@ -18,6 +18,15 @@ partition identically at every seed), its own parameter init, its
 own epoch shuffles (all derived from ``PRNGKey(seed)`` exactly as
 ``DeVertiFL.train`` derives them, so a sweep lane reproduces the
 corresponding standalone run bit-for-bit).
+
+Every lane trains on its own canonical column layout
+(``repro.core.partition.canonicalize``): each seed's data is permuted
+at setup by that seed's layout, and the per-seed ``LayoutArrays``
+(slab masks + slice offsets) ride the vmapped seed axis exactly like
+masks used to.  Canonical offsets/sizes are deterministic per
+(dataset, n_clients) -- only the column *assignment* varies across
+seeds -- which is what lets the pallas first-layer path close over
+static offsets even under the seed vmap.
 
 ``run_cell`` trains one cell and reports per-seed and mean/std F1/acc;
 ``run_grid`` walks the whole grid -- reproducing the paper's
@@ -38,8 +47,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import partition as PT
-from repro.core.protocol import (ARCH_FOR, ProtocolConfig, make_predict_fn,
-                                 make_round_fn, train_keys)
+from repro.core.protocol import (ARCH_FOR, ProtocolConfig, make_perm_fn,
+                                 make_predict_fn, make_round_fn, train_keys)
 from repro.data import synthetic as SD
 from repro.metrics import accuracy, f1_score
 from repro.models.mlp_model import PaperMLP
@@ -59,16 +68,32 @@ class SweepConfig:
     exchange_at: int = -1
     fedavg: bool = True
     n_samples: Optional[int] = None     # dataset size override (speed)
+    first_layer: str = "auto"           # auto | pallas | slice | masked
 
 
 def _stacked_federations(dataset, n_clients, seeds, n_samples):
-    """Per-seed datasets, partitions and keys stacked on axis 0."""
-    xtr, ytr, xte, yte = (jnp.asarray(a) for a in SD.make_dataset_stack(
-        dataset, seeds, n=n_samples))
-    masks = jnp.asarray(PT.stacked_masks(dataset, xtr.shape[-1],
-                                         n_clients, seeds))
+    """Per-seed datasets, canonical layouts and keys stacked on axis 0.
+    Data is permuted into each seed's canonical column order; the
+    LayoutArrays (masks + offsets) carry the per-seed layout through
+    the vmapped round."""
+    xtr, ytr, xte, yte = SD.make_dataset_stack(dataset, seeds, n=n_samples)
+    layouts = [PT.make_layout(dataset, xtr.shape[-1], n_clients, seed=s)
+               for s in seeds]
+    # canonical offsets/sizes are seed-independent (only the column
+    # assignment varies); the pallas path relies on this to close over
+    # static offsets under the seed vmap
+    if any(l.offsets != layouts[0].offsets or l.sizes != layouts[0].sizes
+           for l in layouts):
+        raise ValueError("per-seed canonical layouts disagree on "
+                         "offsets/sizes; the static-offset pallas path "
+                         "cannot be vmapped over such lanes")
+    xtr = jnp.asarray(np.stack([l.apply(x) for x, l in zip(xtr, layouts)]))
+    xte = jnp.asarray(np.stack([l.apply(x) for x, l in zip(xte, layouts)]))
+    ytr, yte = jnp.asarray(ytr), jnp.asarray(yte)
+    lay = jax.tree.map(lambda *a: jnp.stack(a),
+                       *[l.arrays() for l in layouts])
     keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-    return xtr, ytr, xte, yte, masks, keys
+    return xtr, ytr, xte, yte, lay, keys, layouts[0]
 
 
 def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
@@ -78,11 +103,11 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
-        n_samples=scfg.n_samples)
+        n_samples=scfg.n_samples, first_layer=scfg.first_layer)
     model = PaperMLP(get_config(ARCH_FOR[dataset]))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
-    xtr, ytr, xte, yte, masks, keys = _stacked_federations(
+    xtr, ytr, xte, yte, lay, keys, layout = _stacked_federations(
         dataset, n_clients, scfg.seeds, scfg.n_samples)
     n_seeds, n_train = xtr.shape[0], xtr.shape[1]
 
@@ -94,9 +119,9 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
 
     params, opt_state, loop_keys = jax.jit(jax.vmap(init_one))(keys)
 
-    round_fn = make_round_fn(model, opt, pcfg, n_train)
+    round_fn = make_round_fn(model, opt, pcfg, n_train, layout=layout)
     vround = jax.jit(jax.vmap(round_fn), donate_argnums=(0, 1))
-    vpred = jax.jit(jax.vmap(make_predict_fn(model, pcfg)))
+    vpred = jax.jit(jax.vmap(make_predict_fn(model, pcfg, layout=layout)))
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
     step_idx = jnp.zeros((n_seeds,), jnp.int32)
@@ -109,7 +134,7 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     for r in range(pcfg.rounds):
         params, opt_state, step_idx, losses = vround(
             params, opt_state, step_idx, vfold(loop_keys, r),
-            xtr, ytr, masks)
+            xtr, ytr, lay)
         if r == 0 and pcfg.rounds > 1:
             jax.block_until_ready(losses)
             t0 = time.perf_counter()
@@ -117,7 +142,7 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     jax.block_until_ready(losses)
     wall = time.perf_counter() - t0
 
-    preds = np.asarray(vpred(params, xte, masks))    # [S, n, B_test]
+    preds = np.asarray(vpred(params, xte, lay))      # [S, n, B_test]
     yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
     f1s, accs = [], []
     for s in range(n_seeds):
@@ -126,8 +151,8 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
                                   for i in range(n_clients)])))
         accs.append(float(np.mean([accuracy(yte_np[s], preds[s, i])
                                    for i in range(n_clients)])))
-    steps = timed_rounds * pcfg.epochs * (n_train // min(pcfg.batch_size,
-                                                         n_train))
+    steps = timed_rounds * pcfg.epochs * make_perm_fn(pcfg,
+                                                      n_train).n_batches
     return {
         "dataset": dataset, "mode": mode, "n_clients": n_clients,
         "seeds": list(scfg.seeds),

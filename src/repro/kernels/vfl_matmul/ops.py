@@ -1,11 +1,55 @@
-"""jit'd public wrapper for the VFL block-sparse matmul."""
+"""jit'd public wrapper + custom VJP for the VFL block-sparse matmul.
+
+The forward is the Pallas kernel (vfl_matmul_p): y = zeropad(x_local)
+@ w_full computed as x_local @ w_full[offset:offset+K_local] by
+indexing W's row blocks, never materializing the padding.  The VJP
+keeps the same block-sparse structure:
+
+  dx = g @ w_full[offset:offset+K_local].T      (sliced, never padded)
+  dW = scatter-add of x_local.T @ g into W's rows
+       [offset, offset+K_local) -- all other rows get an exact zero
+       gradient, the same zeros the dense zeropad formulation produces
+       (rows outside the slice only ever meet zero inputs).
+
+Both cotangents are accumulated in fp32 and cast back, matching the
+kernel's fp32 VMEM accumulator.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.vfl_matmul.vfl_matmul import vfl_matmul_p
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _vfl_matmul(x_local, w_full, offset, bm, bn, bk, interpret):
+    return vfl_matmul_p(x_local, w_full, offset, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+
+
+def _vfl_matmul_fwd(x_local, w_full, offset, bm, bn, bk, interpret):
+    y = _vfl_matmul(x_local, w_full, offset, bm, bn, bk, interpret)
+    return y, (x_local, w_full)
+
+
+def _vfl_matmul_bwd(offset, bm, bn, bk, interpret, res, g):
+    x_local, w_full = res
+    k_local = x_local.shape[1]
+    w_slice = jax.lax.slice_in_dim(w_full, offset, offset + k_local,
+                                   axis=0)
+    g32 = g.astype(jnp.float32)
+    dx = (g32 @ w_slice.astype(jnp.float32).T).astype(x_local.dtype)
+    dw_block = x_local.astype(jnp.float32).T @ g32
+    dw = (jnp.zeros(w_full.shape, jnp.float32)
+          .at[offset:offset + k_local].add(dw_block)
+          .astype(w_full.dtype))
+    return dx, dw
+
+
+_vfl_matmul.defvjp(_vfl_matmul_fwd, _vfl_matmul_bwd)
 
 
 @functools.partial(jax.jit,
@@ -14,8 +58,8 @@ def vfl_matmul(x_local, w_full, offset: int, *, bm=128, bn=128, bk=128,
                interpret=True):
     """y = zeropad(x_local) @ w_full without materializing the padding.
 
-    interpret defaults to True because this container is CPU-only; on
-    TPU pass interpret=False to run the compiled kernel.
+    Differentiable (custom VJP above). interpret defaults to True
+    because this container is CPU-only; on TPU pass interpret=False to
+    run the compiled kernel.
     """
-    return vfl_matmul_p(x_local, w_full, offset, bm=bm, bn=bn, bk=bk,
-                        interpret=interpret)
+    return _vfl_matmul(x_local, w_full, offset, bm, bn, bk, interpret)

@@ -30,14 +30,20 @@ class PaperMLP:
                                            scale=(2.0 / dims[i]) ** 0.5)
                 for i in range(len(dims) - 1)}
 
+    def forward_from(self, params, h, start=0, upto=None):
+        """Hidden layers [start, upto): h is the input when start=0,
+        else the post-ReLU output of hidden layer start-1. The protocol
+        engine's slice-aware first-layer paths compute layer 0 per
+        client slice and continue here with start=1."""
+        n = self.n_hidden if upto is None else upto
+        for i in range(start, n):
+            h = jax.nn.relu(L.dense(params[f"layer_{i}"], h))
+        return h
+
     def forward_hidden(self, params, x, upto=None):
         """Forward through hidden layers; returns pre-head hidden.
         upto=k stops after hidden layer k (used by the exchange)."""
-        n = self.n_hidden if upto is None else upto
-        h = x
-        for i in range(n):
-            h = jax.nn.relu(L.dense(params[f"layer_{i}"], h))
-        return h
+        return self.forward_from(params, x, 0, upto)
 
     def head(self, params, h):
         return L.dense(params[f"layer_{self.n_hidden}"], h)
