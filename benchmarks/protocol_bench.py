@@ -1,8 +1,15 @@
 """Protocol engine throughput across first-layer strategies: the
 paper-literal masked (zero-padded) scan, the slice-aware dynamic_slice
 scan, the vfl_matmul Pallas scan, and the per-batch Python-loop
-reference -- plus sweep throughput (seed-vmapped federations from
-repro.core.sweep).
+reference -- plus the sweep lane comparing three executions of the
+same multi-client-count grid slice:
+
+  looped   one run_cell per client count (one compile EACH)
+  padded   run_padded_cells: all counts on one padded lane axis,
+           ONE compile, single device
+  sharded  run_padded_cells with the lane axis shard_map'ed over
+           the device mesh (== padded when only one device exists;
+           the recorded "devices" field disambiguates)
 
 Appends one dated, git-SHA-keyed entry per run to
 benchmarks/results/BENCH_protocol.json (a list), so the perf
@@ -12,8 +19,12 @@ trajectory accumulates across PRs instead of being overwritten:
     "engines": {"loop": sps, "masked": sps, "slice": sps,
                 "pallas": sps},
     "slice_speedup_vs_masked": ..., "scan_speedup_vs_loop": ...,
-    "sweep": {...}}, ...]
+    "sweep": {"client_counts": [...], "n_seeds": ...,
+              "looped_cells_per_sec": ..., "padded_cells_per_sec": ...,
+              "sharded_cells_per_sec": ..., "devices": ...,
+              "round_traces": ...}}, ...]
 
+(docs/ARCHITECTURE.md documents the append-only schema contract.)
 Pre-slice-engine entries (a single dict with loop/scan keys) are
 migrated into the list on first append.
 
@@ -32,7 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
-from repro.core.sweep import SweepConfig, run_cell
+from repro.core.sweep import SweepConfig, run_cell, run_padded_cells
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -112,10 +123,51 @@ def run(smoke=False, results_path=None, iters=None):
                 n_steps, iters=iters)
 
     sweep_scfg = (SweepConfig(seeds=(0, 1), rounds=2, epochs=1,
-                              n_samples=512) if smoke else
+                              n_samples=512, client_counts=(2, 3))
+                  if smoke else
                   SweepConfig(seeds=(0, 1, 2, 3), rounds=2, epochs=2,
-                              n_samples=2000))
-    sweep_cell = run_cell("mnist", "devertifl", 3, sweep_scfg)
+                              n_samples=2000, client_counts=(2, 3, 5)))
+    counts = tuple(sweep_scfg.client_counts)
+    # all three lanes are timed END-TO-END (data stacking + compiles +
+    # training + eval): compile amortization is the padded engine's
+    # win, so the walls must include it on every side
+    t0 = time.perf_counter()
+    looped_cells = [run_cell("mnist", "devertifl", nc, sweep_scfg)
+                    for nc in counts]
+    looped_wall = time.perf_counter() - t0
+    # padded: every count on one lane axis, ONE round compile
+    t0 = time.perf_counter()
+    padded = run_padded_cells("mnist", "devertifl", sweep_scfg,
+                              shard=False)
+    padded_wall = time.perf_counter() - t0
+    # sharded: same batch, lanes split over the device mesh.  With a
+    # single device the shard_map is a no-op and the run would be
+    # bitwise the padded one -- reuse it instead of paying a second
+    # compile + train just to record noise.
+    if jax.device_count() > 1:
+        t0 = time.perf_counter()
+        sharded = run_padded_cells("mnist", "devertifl", sweep_scfg,
+                                   shard="auto")
+        sharded_wall = time.perf_counter() - t0
+    else:
+        sharded, sharded_wall = padded, padded_wall
+    sweep_entry = {
+        "client_counts": list(counts),
+        "n_seeds": len(sweep_scfg.seeds),
+        "looped_cells_per_sec": len(counts) / max(looped_wall, 1e-9),
+        "padded_cells_per_sec": len(counts) / max(padded_wall, 1e-9),
+        "sharded_cells_per_sec": len(counts) / max(sharded_wall, 1e-9),
+        # steady-state (post-compile) throughput of the padded batch
+        "padded_steady_cells_per_sec": padded["cells_per_sec"],
+        "devices": sharded["devices"],
+        "round_traces": padded["round_traces"],
+        # the SAME n_clients=3 run_cell measurement older trajectory
+        # entries recorded, so the steps_per_sec series stays
+        # comparable across PRs (if 3 ever leaves the count list, fall
+        # back to the first count rather than aborting a finished run)
+        "steps_per_sec": looped_cells[
+            counts.index(3) if 3 in counts else 0]["steps_per_sec"],
+    }
 
     entry = {
         "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
@@ -132,11 +184,7 @@ def run(smoke=False, results_path=None, iters=None):
         # same first layer on both sides: comparable with PR 1's
         # scan_speedup trajectory entry
         "scan_speedup_vs_loop": engines["masked"] / engines["loop"],
-        "sweep": {
-            "n_seeds": len(sweep_cell["seeds"]),
-            "steps_per_sec": sweep_cell["steps_per_sec"],
-            "wall_s": sweep_cell["wall_s"],
-        },
+        "sweep": sweep_entry,
     }
     if results_path is None and not smoke:
         os.makedirs(RESULTS, exist_ok=True)
@@ -149,8 +197,13 @@ def run(smoke=False, results_path=None, iters=None):
     rows += [
         ("protocol/slice_vs_masked", 0.0,
          f"x{entry['slice_speedup_vs_masked']:.2f}"),
-        ("protocol/sweep", sweep_cell["wall_s"] * 1e6,
-         f"steps_per_sec={sweep_cell['steps_per_sec']:.1f}"),
+        ("protocol/sweep_looped", looped_wall * 1e6,
+         f"cells_per_sec={sweep_entry['looped_cells_per_sec']:.2f}"),
+        ("protocol/sweep_padded", padded_wall * 1e6,
+         f"cells_per_sec={sweep_entry['padded_cells_per_sec']:.2f}"),
+        ("protocol/sweep_sharded", sharded_wall * 1e6,
+         f"cells_per_sec={sweep_entry['sharded_cells_per_sec']:.2f}"
+         f" devices={sweep_entry['devices']}"),
     ]
     return rows
 

@@ -9,15 +9,22 @@ import time
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="One function per paper table/figure; prints "
+                    "name,us_per_call,derived CSV rows.")
     ap.add_argument("--paper", action="store_true",
                     help="full client range 2..10, 3 seeds (slow)")
     ap.add_argument("--smoke", action="store_true",
-                    help="protocol_bench only, toy sizes, no result-file "
-                         "write -- fast perf-regression canary")
+                    help="fast perf-regression canary (~1 min): runs ONLY "
+                         "the protocol lane (engine + sweep throughput) at "
+                         "toy sizes and skips the figures, table2, "
+                         "kernels, roofline, and ablations lanes; nothing "
+                         "is written to benchmarks/results/. Paired with "
+                         "the 'fast' pytest marker in scripts/ci.sh.")
     ap.add_argument("--only", default=None,
-                    help="comma list: figures,table2,kernels,roofline,"
-                         "ablations,protocol")
+                    help="comma list of lanes to run: figures,table2,"
+                         "kernels,roofline,ablations,protocol "
+                         "(default: all; incompatible with --smoke)")
     args = ap.parse_args()
     which = set((args.only or
                  "figures,table2,kernels,roofline,ablations,protocol"

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Fast CI gate: the `fast` pytest marker suite plus the benchmark smoke
+# lane (protocol engine + sweep throughput at toy sizes, no result-file
+# writes).  Keeps the README quickstart commands and the smoke lanes
+# from rotting.  Full tier-1 is `PYTHONPATH=src python -m pytest -x -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest -m fast =="
+python -m pytest -q -m fast
+
+echo "== benchmarks/run.py --smoke =="
+python -m benchmarks.run --smoke
+
+echo "ci.sh: all green"

@@ -22,27 +22,52 @@ import jax
 import jax.numpy as jnp
 
 
-def hidden_output_exchange(h_all, differentiable=False):
+def hidden_output_exchange(h_all, differentiable=False, client_mask=None):
     """h_all: [n_clients, B, H] per-client hidden outputs.
 
     Returns [n_clients, B, H]: for client i, h_i + sum of peers' hiddens.
     With differentiable=False (De-VertiFL), peers' terms carry no
     gradient; with True, gradients flow to every contributor (this is
     the VertiComb-style backward exchange used as a baseline).
+
+    client_mask ([n_clients], 1.0 = live) excludes dead padding slots
+    from the broadcast sum: a dead client contributes an exact +0.0
+    term, so the live clients' exchanged sum is bit-for-bit the
+    unpadded sum (adding trailing zeros to an XLA reduction preserves
+    every bit -- pinned in tests/test_padded_engine.py).  Dead rows of
+    the *output* are garbage; the protocol masks them out of every
+    loss/metric downstream.
     """
-    total = h_all.sum(axis=0, keepdims=True)        # [1, B, H]
+    hm = h_all if client_mask is None else \
+        h_all * client_mask[:, None, None]
+    total = hm.sum(axis=0, keepdims=True)           # [1, B, H]
     if differentiable:
         return jnp.broadcast_to(total, h_all.shape)
-    peers = jax.lax.stop_gradient(total - h_all)    # const contribution
+    peers = jax.lax.stop_gradient(total - hm)       # const contribution
     return h_all + peers
 
 
-def fedavg(stacked_params):
+def fedavg(stacked_params, client_mask=None):
     """P2P weight exchange + FedAvg (Algorithm 1 lines 16-19): every
     client receives every peer's weights and averages. stacked_params
     has a leading client axis on every leaf; returns the same structure
-    with every client's slot set to the mean."""
-    def avg(leaf):
-        m = leaf.mean(axis=0, keepdims=True)
-        return jnp.broadcast_to(m, leaf.shape)
+    with every client's slot set to the mean.
+
+    client_mask weights the average so dead padding slots contribute
+    nothing (live mean is broadcast to every slot, dead ones included,
+    keeping the all-clients-synced invariant).  The masked mean is
+    computed as ``sum * (1/n_live)`` -- a multiply, exactly how XLA
+    lowers ``mean`` -- so the unpadded all-ones mask reproduces
+    ``leaf.mean(axis=0)`` bit for bit."""
+    if client_mask is None:
+        def avg(leaf):
+            m = leaf.mean(axis=0, keepdims=True)
+            return jnp.broadcast_to(m, leaf.shape)
+    else:
+        inv_live = 1.0 / client_mask.sum()
+
+        def avg(leaf):
+            cm = client_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            m = (leaf * cm).sum(axis=0, keepdims=True) * inv_live
+            return jnp.broadcast_to(m, leaf.shape)
     return jax.tree.map(avg, stacked_params)

@@ -27,6 +27,21 @@ the XLA engine path can ``dynamic_slice`` instead of masking, and the
 blocks.  ``Layout.block`` is the largest block size (capped at 128)
 that divides every slice size -- and therefore every offset -- so all
 slices are block-aligned for the kernel's BlockSpec index_map.
+
+Padded client axes
+------------------
+``Layout.pad(max_clients)`` appends *dead* client slots (empty feature
+slice, all-zero mask) so federations with different participant counts
+ride arrays of one static client-axis length and can share a single
+compiled round function (repro.core.sweep stacks client-count lanes
+this way).  ``LayoutArrays.client_mask`` is the runtime 0/1 view of
+which slots are live; the protocol engine multiplies it into the
+HiddenOutputExchange sum, the FedAvg weighting, and every loss mean,
+so dead slots contribute exact zeros and a padded federation's live
+clients train bit-for-bit identically to the unpadded run
+(tests/test_padded_engine.py pins this).
+
+See docs/ARCHITECTURE.md for the full Layout/LayoutArrays contract.
 """
 from __future__ import annotations
 
@@ -60,15 +75,27 @@ def masks_for(partition, n_features, dtype=np.float32):
 # ---------------------------------------------------------------------------
 class LayoutArrays(NamedTuple):
     """The device-array view of a Layout, threaded through the jitted
-    step/round/predict functions (and vmapped over a seed axis by
-    repro.core.sweep, exactly like masks used to be):
+    step/round/predict functions (and vmapped over a seed axis -- and
+    now a (seed x client-count) lane axis -- by repro.core.sweep,
+    exactly like masks used to be):
 
-      masks    [n_clients, n_features] contiguous-slab zeropad masks
-               (canonical column order) -- the masked reference path
-      offsets  [n_clients] int32 slice starts -- the dynamic_slice path
+      masks        [n_clients, n_features] contiguous-slab zeropad
+                   masks (canonical column order) -- the masked
+                   reference path; dead (padded) clients are all-zero
+      offsets      [n_clients] int32 slice starts -- the dynamic_slice
+                   path; dead clients hold 0
+      sizes        [n_clients] int32 slice lengths -- runtime view of
+                   Layout.sizes for shape-uniform (padded-sweep) first
+                   layers; dead clients hold 0
+      client_mask  [n_clients] float 1.0 = live participant, 0.0 =
+                   dead padding slot.  Multiplied into the exchange
+                   sum, FedAvg weights, and loss means so dead slots
+                   contribute exact zeros.
     """
     masks: object
     offsets: object
+    sizes: object
+    client_mask: object
 
 
 @dataclass(frozen=True, eq=False)
@@ -81,8 +108,11 @@ class Layout:
                 inv_perm[f]
     offsets     per-client canonical slice starts (python ints: static
                 under jit, usable in Pallas BlockSpec index_maps)
-    sizes       per-client slice lengths F_i
-    block       largest bk <= 128 dividing every size (hence offset)
+    sizes       per-client slice lengths F_i (0 for dead padding slots)
+    block       largest bk <= 128 dividing every live size (hence
+                every offset)
+    n_real      number of LIVE participants; clients [n_real,
+                n_clients) are dead padding slots added by ``pad``
     """
     partition: Tuple[np.ndarray, ...]
     perm: np.ndarray
@@ -91,9 +121,11 @@ class Layout:
     sizes: Tuple[int, ...]
     block: int
     n_features: int
+    n_real: int
 
     @property
     def n_clients(self) -> int:
+        """Padded client-axis length (== n_real for unpadded layouts)."""
         return len(self.sizes)
 
     def apply(self, x):
@@ -101,16 +133,42 @@ class Layout:
         return x[..., self.perm]
 
     def masks(self, dtype=np.float32):
-        """Contiguous-slab zeropad masks in canonical column order."""
+        """Contiguous-slab zeropad masks in canonical column order.
+        Dead (padded) clients get all-zero rows."""
         m = np.zeros((self.n_clients, self.n_features), dtype)
         for i, (off, sz) in enumerate(zip(self.offsets, self.sizes)):
             m[i, off:off + sz] = 1
         return m
 
+    def client_mask(self, dtype=np.float32):
+        """[n_clients] 1.0 for live participants, 0.0 for padding."""
+        return (np.arange(self.n_clients) < self.n_real).astype(dtype)
+
+    def pad(self, max_clients: int) -> "Layout":
+        """Append dead client slots until the client axis has length
+        ``max_clients``.  Dead slots own no features (empty slice at
+        offset 0, all-zero mask); the protocol engine excludes them
+        from the exchange and FedAvg via ``client_mask``."""
+        if max_clients < self.n_clients:
+            raise ValueError(f"max_clients={max_clients} < existing "
+                             f"client axis {self.n_clients}")
+        k = max_clients - self.n_clients
+        if k == 0:
+            return self
+        import dataclasses
+        empty = tuple(np.empty((0,), self.partition[0].dtype)
+                      for _ in range(k))
+        return dataclasses.replace(
+            self, partition=self.partition + empty,
+            offsets=self.offsets + (0,) * k,
+            sizes=self.sizes + (0,) * k)
+
     def arrays(self) -> LayoutArrays:
         import jax.numpy as jnp
         return LayoutArrays(masks=jnp.asarray(self.masks()),
-                            offsets=jnp.asarray(self.offsets, jnp.int32))
+                            offsets=jnp.asarray(self.offsets, jnp.int32),
+                            sizes=jnp.asarray(self.sizes, jnp.int32),
+                            client_mask=jnp.asarray(self.client_mask()))
 
 
 def _block_of(sizes: Sequence[int], cap: int = 128) -> int:
@@ -139,11 +197,13 @@ def canonicalize(partition, n_features: int) -> Layout:
                     np.concatenate([[0], np.cumsum(sizes)[:-1]]))
     return Layout(partition=parts, perm=perm, inv_perm=inv_perm,
                   offsets=offsets, sizes=sizes,
-                  block=_block_of(sizes), n_features=n_features)
+                  block=_block_of(sizes), n_features=n_features,
+                  n_real=len(parts))
 
 
 def make_layout(dataset: str, n_features: int, n_clients: int,
-                seed=0) -> Layout:
-    """Partition + canonicalize in one call."""
-    return canonicalize(make_partition(dataset, n_features, n_clients,
-                                       seed=seed), n_features)
+                seed=0, max_clients=None) -> Layout:
+    """Partition + canonicalize (+ optional padding) in one call."""
+    lay = canonicalize(make_partition(dataset, n_features, n_clients,
+                                      seed=seed), n_features)
+    return lay if max_clients is None else lay.pad(max_clients)

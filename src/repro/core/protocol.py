@@ -47,13 +47,31 @@ masked and slice/pallas differ only in float reduction order, so
 loss/F1 trajectories agree to allclose rather than bitwise
 (tests/test_slice_engine.py pins this).
 
+Padded client axes
+~~~~~~~~~~~~~~~~~~
+``ProtocolConfig.max_clients`` pads the client axis with dead slots
+(``Layout.pad``): params/opt state/activations ride arrays of length
+max_clients while only the first n_clients slots are live.  Every
+cross-client dataflow honors ``LayoutArrays.client_mask`` -- the
+exchange sums ``h * client_mask``, FedAvg weights by it, and loss
+means divide by the LIVE count via a reciprocal multiply -- so dead
+slots contribute exact-zero terms and the live clients' trajectories
+are bit-for-bit the unpadded run's in all three first-layer lanes
+(tests/test_padded_engine.py).  This is what lets repro.core.sweep
+stack different client counts on one vmapped lane axis and compile a
+dataset x mode grid once.
+
 ``DeVertiFL.train`` drives make_round_fn under jit (engine="scan", the
 default). A per-batch host-dispatched loop is retained as
 engine="python" (same jitted step, host-side batch dispatch). Both
 engines consume the identical device-generated permutation stream, so
 their loss/F1 trajectories match bit-for-bit at a fixed seed
 (tests/test_engine.py asserts this). repro.core.sweep vmaps
-make_round_fn over seeds for grid experiments.
+make_round_fn over a (seed x client-count) lane axis for grid
+experiments and shards the lanes over the device mesh.
+
+See docs/ARCHITECTURE.md for the scan-round key-derivation and
+PermPlan contracts.
 """
 from __future__ import annotations
 
@@ -96,9 +114,18 @@ class ProtocolConfig:
     n_samples: Optional[int] = None     # dataset size override (speed)
     engine: str = "scan"                # scan | python (reference loop)
     first_layer: str = "auto"           # auto | pallas | slice | masked
+    # Pad the client axis to this length with dead (masked) slots; None
+    # means no padding. Live trajectories are bit-for-bit unchanged --
+    # padding only buys shape-uniformity across client counts.
+    max_clients: Optional[int] = None
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
+
+    @property
+    def padded_clients(self) -> int:
+        """Static client-axis length (max_clients or n_clients)."""
+        return self.max_clients or self.n_clients
 
 
 ARCH_FOR = {"mnist": "paper-mlp-mnist", "fmnist": "paper-mlp-fmnist",
@@ -152,6 +179,21 @@ def _ce(logits, labels):
     return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
 
 
+def _masked_mean(values, client_mask):
+    """Mean over live clients: sum(v * mask) * (1/n_live).  The
+    reciprocal MULTIPLY (not a divide) matters: XLA lowers ``mean`` to
+    sum * (1/n), so this is bit-for-bit ``values[:n_live].mean()`` when
+    the dead tail is masked to exact zeros -- a traced divide would
+    differ in the last ulp."""
+    return (values * client_mask).sum() * (1.0 / client_mask.sum())
+
+
+def _masked_hidden_sum(h_all, client_mask):
+    """[n, B, H] -> [B, H] exchange sum excluding dead clients (their
+    terms are exact +0.0, preserving the unpadded reduction bits)."""
+    return (h_all * client_mask[:, None, None]).sum(0)
+
+
 def make_first_layer_fn(model, pcfg, layout, interpret=None):
     """first(params, xb, lay) -> [n_clients, B, H] post-ReLU layer-0
     activations.  xb is the canonical-order [B, F] batch; lay is the
@@ -174,12 +216,24 @@ def make_first_layer_fn(model, pcfg, layout, interpret=None):
     assert layout is not None, f"first_layer={fl!r} needs a Layout"
     sizes = layout.sizes
 
+    # Dead (padded) clients own an empty feature slice: their layer-0
+    # matmul is the empty contraction [B,0]@[0,H] == 0, so h1 is
+    # relu(bias) -- computed directly, no degenerate slice/kernel call.
+    # The value never matters (client_mask zeroes dead contributions
+    # downstream) but keeping the bias term preserves the historical
+    # dynamic_slice semantics for zero-feature clients.
+    def dead_h1(xb, b_i, h):
+        return jax.nn.relu(jnp.broadcast_to(b_i, (xb.shape[0], h)))
+
     if fl == "slice":
         def first_slice(params, xb, lay):
             w = params["layer_0"]["kernel"]     # [n, F, H]
             b = params["layer_0"]["bias"]       # [n, H]
             outs = []
             for i, f_i in enumerate(sizes):
+                if f_i == 0:
+                    outs.append(dead_h1(xb, b[i], w.shape[-1]))
+                    continue
                 x_i = jax.lax.dynamic_slice(
                     xb, (0, lay.offsets[i]), (xb.shape[0], f_i))
                 w_i = jax.lax.dynamic_slice(
@@ -200,6 +254,14 @@ def make_first_layer_fn(model, pcfg, layout, interpret=None):
         b = params["layer_0"]["bias"]
         outs = []
         for i, (off, f_i) in enumerate(zip(offsets, sizes)):
+            if f_i == 0:
+                # dead (and degenerate zero-feature) clients never
+                # reach the kernel -- so every kernel call here has
+                # client_mask[i] == 1 and needs no gate=; the kernel's
+                # gate stays for lanes whose liveness is only known at
+                # runtime (e.g. a future scalar-prefetch sweep path)
+                outs.append(dead_h1(xb, b[i], w.shape[-1]))
+                continue
             x_i = jax.lax.slice_in_dim(xb, off, off + f_i, axis=1)
             y = vfl_matmul(x_i, w[i], off, bk=bk, interpret=interpret)
             outs.append(jax.nn.relu(y + b[i]))
@@ -207,13 +269,22 @@ def make_first_layer_fn(model, pcfg, layout, interpret=None):
     return first_pallas
 
 
-def make_step_fn(model, opt, pcfg, layout=None):
+def make_step_fn(model, opt, pcfg, layout=None, first_layer_fn=None):
     """One all-clients optimizer step for pcfg.mode.
 
     Signature: step(params, opt_state, lay, xb, yb, step_idx)
       -> (params, opt_state, mean_loss).  lay is a LayoutArrays
-    argument (not a closure) so sweeps can vmap it over per-seed
-    partitions; xb is in canonical column order.
+    argument (not a closure) so sweeps can vmap it over per-seed (and
+    per-client-count) partitions; xb is in canonical column order.
+
+    Every cross-client reduction honors lay.client_mask: the exchange
+    sums only live clients' hiddens (dead terms are exact zeros) and
+    the reported loss is the mean over live clients.  With an all-ones
+    mask (unpadded layouts) these are bit-for-bit the unmasked ops.
+
+    first_layer_fn overrides the slice/pallas first layer (the padded
+    sweep passes a shape-uniform gather-slice variant that reads sizes
+    and offsets from lay instead of closing over layout statics).
     """
     fl = resolve_first_layer(pcfg)
     hidden = partial(client_hidden, model, pcfg.exchange_at)
@@ -232,7 +303,8 @@ def make_step_fn(model, opt, pcfg, layout=None):
         def devertifl_step(params, opt_state, lay, xb, yb, step_idx):
             xm = xb[None] * lay.masks[:, None, :]   # [n, B, F] zeropad
             h_all = jax.vmap(hidden)(params, xm)
-            h_sum = jax.lax.stop_gradient(h_all.sum(0))  # peers as data
+            h_sum = jax.lax.stop_gradient(
+                _masked_hidden_sum(h_all, lay.client_mask))  # peers=data
 
             def client_loss(p, x_i):
                 h_i = hidden(p, x_i)
@@ -243,7 +315,7 @@ def make_step_fn(model, opt, pcfg, layout=None):
             losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
                 params, xm)
             params, opt_state = update(params, opt_state, grads, step_idx)
-            return params, opt_state, losses.mean()
+            return params, opt_state, _masked_mean(losses, lay.client_mask)
 
         def nonfed_step(params, opt_state, lay, xb, yb, step_idx):
             xm = xb[None] * lay.masks[:, None, :]
@@ -255,16 +327,20 @@ def make_step_fn(model, opt, pcfg, layout=None):
             losses, grads = jax.vmap(jax.value_and_grad(client_loss))(
                 params, xm)
             params, opt_state = update(params, opt_state, grads, step_idx)
-            return params, opt_state, losses.mean()
+            return params, opt_state, _masked_mean(losses, lay.client_mask)
 
         def verticomb_step(params, opt_state, lay, xb, yb, step_idx):
             xm = xb[None] * lay.masks[:, None, :]
 
             def total_loss(ps):
                 h_all = jax.vmap(hidden)(ps, xm)
-                h_sum = h_all.sum(0)                # grads flow to all
+                # grads flow to all LIVE contributors; a dead client's
+                # hidden is multiplied by 0, so its params get exact
+                # zero grads from peers' losses
+                h_sum = _masked_hidden_sum(h_all, lay.client_mask)
                 logits = jax.vmap(lambda p: through(p, h_sum))(ps)
-                return jax.vmap(_ce, in_axes=(0, None))(logits, yb).mean()
+                losses = jax.vmap(_ce, in_axes=(0, None))(logits, yb)
+                return _masked_mean(losses, lay.client_mask)
 
             loss, grads = jax.value_and_grad(total_loss)(params)
             params, opt_state = update(params, opt_state, grads, step_idx)
@@ -272,11 +348,11 @@ def make_step_fn(model, opt, pcfg, layout=None):
 
     else:
         # slice/pallas: layer 0 reads only the client's feature slice;
-        # per-client grads come from grad(sum of per-client losses) --
-        # loss_i depends on params[i] alone (peer terms are
+        # per-client grads come from grad(masked sum of per-client
+        # losses) -- loss_i depends on params[i] alone (peer terms are
         # stop-gradient'ed), so the stacked gradient IS the per-client
-        # gradient stack
-        first = make_first_layer_fn(model, pcfg, layout)
+        # gradient stack, and masking drops dead clients' grads
+        first = first_layer_fn or make_first_layer_fn(model, pcfg, layout)
         hidden_from = partial(client_hidden_from, model, pcfg.exchange_at)
 
         def losses_fn(ps, lay, xb, yb, differentiable=None):
@@ -284,32 +360,33 @@ def make_step_fn(model, opt, pcfg, layout=None):
             h_all = jax.vmap(hidden_from)(ps, h1)
             if differentiable is not None:
                 h_all = hidden_output_exchange(
-                    h_all, differentiable=differentiable)
+                    h_all, differentiable=differentiable,
+                    client_mask=lay.client_mask)
             logits = jax.vmap(through)(ps, h_all)
             return jax.vmap(_ce, in_axes=(0, None))(logits, yb)   # [n]
 
         def devertifl_step(params, opt_state, lay, xb, yb, step_idx):
             def total(ps):
                 losses = losses_fn(ps, lay, xb, yb, differentiable=False)
-                return losses.sum(), losses
+                return (losses * lay.client_mask).sum(), losses
 
             grads, losses = jax.grad(total, has_aux=True)(params)
             params, opt_state = update(params, opt_state, grads, step_idx)
-            return params, opt_state, losses.mean()
+            return params, opt_state, _masked_mean(losses, lay.client_mask)
 
         def nonfed_step(params, opt_state, lay, xb, yb, step_idx):
             def total(ps):
                 losses = losses_fn(ps, lay, xb, yb)
-                return losses.sum(), losses
+                return (losses * lay.client_mask).sum(), losses
 
             grads, losses = jax.grad(total, has_aux=True)(params)
             params, opt_state = update(params, opt_state, grads, step_idx)
-            return params, opt_state, losses.mean()
+            return params, opt_state, _masked_mean(losses, lay.client_mask)
 
         def verticomb_step(params, opt_state, lay, xb, yb, step_idx):
             def total(ps):
-                return losses_fn(ps, lay, xb, yb,
-                                 differentiable=True).mean()
+                losses = losses_fn(ps, lay, xb, yb, differentiable=True)
+                return _masked_mean(losses, lay.client_mask)
 
             loss, grads = jax.value_and_grad(total)(params)
             params, opt_state = update(params, opt_state, grads, step_idx)
@@ -355,7 +432,30 @@ def make_perm_fn(pcfg, n_train) -> PermPlan:
     return PermPlan(perms, n_batches, bs, n_train - n_batches * bs)
 
 
-def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None):
+def accepts_client_mask(fn) -> bool:
+    """Whether an aggregation fn's signature takes client_mask=."""
+    import inspect
+    try:
+        return "client_mask" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def call_fedavg(fedavg_fn, params, client_mask):
+    """Invoke an aggregation fn, passing client_mask only if its
+    signature accepts it -- custom aggregators from set_fedavg (e.g.
+    the weighted-FedAvg ablation's ``lambda p: ...``) keep working
+    unchanged, while the default exchange.fedavg weights by the mask
+    so dead padding slots never dilute the average.  On PADDED client
+    axes a mask-blind custom aggregator is rejected at build time by
+    make_round_fn, never silently mis-averaged."""
+    if accepts_client_mask(fedavg_fn):
+        return fedavg_fn(params, client_mask=client_mask)
+    return fedavg_fn(params)
+
+
+def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None,
+                  first_layer_fn=None):
     """One De-VertiFL round as a single jittable function: generate the
     epoch permutations on device, lax.scan the step over every batch of
     every epoch (step_idx carried in the scan), then apply the P2P
@@ -364,15 +464,26 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None):
     Signature: round_fn(params, opt_state, step_idx, key, xtr, ytr,
     lay) -> (params, opt_state, step_idx, losses[epochs*n_batches]).
     Data (canonical column order) and the LayoutArrays are arguments so
-    a sweep can vmap the whole round over a leading seed axis.
+    a sweep can vmap the whole round over a leading lane axis (seeds,
+    or seeds x client counts on padded layouts).
     fedavg_fn overrides the uniform-mean aggregation (e.g. the
     weighted-FedAvg ablation); it is baked into the jitted round, so
-    pass it here rather than patching afterwards.
+    pass it here rather than patching afterwards.  first_layer_fn is
+    forwarded to make_step_fn (padded-sweep override).
     """
-    step = make_step_fn(model, opt, pcfg, layout=layout)
+    step = make_step_fn(model, opt, pcfg, layout=layout,
+                        first_layer_fn=first_layer_fn)
     perm_fn = make_perm_fn(pcfg, n_train).perms
     do_fedavg = pcfg.fedavg and pcfg.mode != "non_federated"
     fedavg_fn = fedavg_fn or fedavg
+    padded = (pcfg.max_clients or 0) > pcfg.n_clients or (
+        layout is not None and layout.n_real < layout.n_clients)
+    if do_fedavg and padded and not accepts_client_mask(fedavg_fn):
+        raise ValueError(
+            "custom fedavg_fn must accept a client_mask= keyword when "
+            "the client axis is padded (max_clients > n_clients): a "
+            "mask-blind aggregator would average dead slots' params "
+            "into every live client")
 
     def round_fn(params, opt_state, step_idx, key, xtr, ytr, lay):
         idx = perm_fn(key)
@@ -388,15 +499,17 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None):
         (params, opt_state, step_idx), losses = jax.lax.scan(
             body, (params, opt_state, step_idx), idx)
         if do_fedavg:
-            params = fedavg_fn(params)
+            params = call_fedavg(fedavg_fn, params, lay.client_mask)
         return params, opt_state, step_idx, losses
 
     return round_fn
 
 
-def make_predict_fn(model, pcfg, layout=None):
+def make_predict_fn(model, pcfg, layout=None, first_layer_fn=None):
     """predict(params, x, lay) -> [n_clients, B] class predictions.
-    x is in canonical column order (Layout.apply)."""
+    x is in canonical column order (Layout.apply).  Dead padded
+    clients' rows are garbage -- callers average metrics over the live
+    prefix only."""
     fl = resolve_first_layer(pcfg)
     through = partial(rest, model, pcfg.exchange_at)
 
@@ -407,7 +520,7 @@ def make_predict_fn(model, pcfg, layout=None):
             xm = x[None] * lay.masks[:, None, :]
             return jax.vmap(hidden)(params, xm)
     else:
-        first = make_first_layer_fn(model, pcfg, layout)
+        first = first_layer_fn or make_first_layer_fn(model, pcfg, layout)
         hidden_from = partial(client_hidden_from, model, pcfg.exchange_at)
 
         def h_all_fn(params, x, lay):
@@ -416,7 +529,8 @@ def make_predict_fn(model, pcfg, layout=None):
     def predict(params, x, lay):
         h_all = h_all_fn(params, x, lay)
         if pcfg.mode in ("devertifl", "verticomb"):
-            h_all = hidden_output_exchange(h_all, differentiable=False)
+            h_all = hidden_output_exchange(h_all, differentiable=False,
+                                           client_mask=lay.client_mask)
         logits = jax.vmap(through)(params, h_all)   # [n, B, C]
         return jnp.argmax(logits, axis=-1)          # per-client preds
 
@@ -429,6 +543,24 @@ def train_keys(key):
     sweep lane reproduces the standalone run bit-for-bit."""
     init_key, loop_key = jax.random.split(key)
     return init_key, loop_key
+
+
+def init_padded_params(model, init_key, n_clients, padded_clients=None):
+    """Per-client param stack with a padded client axis.  The LIVE
+    clients' keys are ``split(init_key, n_clients)`` -- exactly the
+    unpadded derivation, because ``split(key, n)[:k] != split(key, k)``
+    and bit-for-bit padding equivalence requires the live inits to
+    match.  Dead slots draw from an independent folded key; their
+    values never reach a live client (masked out of the exchange and
+    FedAvg before the first aggregation)."""
+    padded_clients = padded_clients or n_clients
+    keys = jax.random.split(init_key, n_clients)
+    if padded_clients > n_clients:
+        dead = jax.random.split(
+            jax.random.fold_in(init_key, np.iinfo(np.int32).max),
+            padded_clients - n_clients)
+        keys = jnp.concatenate([keys, dead])
+    return jax.vmap(model.init)(keys)
 
 
 # ---------------------------------------------------------------------------
@@ -450,8 +582,11 @@ class DeVertiFL:
         self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
         self.n_features = self.model.in_features
         self.layout = PT.make_layout(pcfg.dataset, self.n_features,
-                                     pcfg.n_clients, seed=pcfg.seed)
-        self.partition = self.layout.partition
+                                     pcfg.n_clients, seed=pcfg.seed,
+                                     max_clients=pcfg.max_clients)
+        # live clients' ORIGINAL feature ids (dead padding slots are an
+        # engine detail; the public partition is the paper's)
+        self.partition = self.layout.partition[:pcfg.n_clients]
         self._lay = self.layout.arrays()
         # public masks stay in RAW column order so they compose with the
         # public raw-order xtr/xte (fed.xte * fed.masks[i] is the
@@ -466,8 +601,8 @@ class DeVertiFL:
 
     # ------------------------------------------------------------------
     def init_params(self, key):
-        keys = jax.random.split(key, self.pcfg.n_clients)
-        return jax.vmap(self.model.init)(keys)
+        return init_padded_params(self.model, key, self.pcfg.n_clients,
+                                  self.pcfg.padded_clients)
 
     # ------------------------------------------------------------------
     def _build_steps(self):
@@ -484,7 +619,9 @@ class DeVertiFL:
             make_round_fn(self.model, self.opt, pcfg, n_train,
                           fedavg_fn=fa, layout=self.layout),
             donate_argnums=(0, 1))
-        self._fedavg = jax.jit(fa, donate_argnums=(0,))
+        self._fedavg = jax.jit(
+            lambda p: call_fedavg(fa, p, self._lay.client_mask),
+            donate_argnums=(0,))
         self._predict = jax.jit(
             make_predict_fn(self.model, pcfg, layout=self.layout))
 

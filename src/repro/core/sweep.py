@@ -1,38 +1,60 @@
-"""Seed-vmapped grid sweeps over De-VertiFL federations.
+"""Vmapped, sharded grid sweeps over De-VertiFL federations.
 
 Grid semantics
 --------------
-A sweep is the cartesian grid  datasets x modes x client_counts, and
-every grid **cell** is a *batch of federations*: one federation per
-seed, all trained simultaneously by ``jax.vmap`` over a leading seed
-axis of (params, opt_state, step_idx, round keys, data, layout).  Per
-cell there is exactly ONE compilation -- the jitted, vmapped round
-function from ``repro.core.protocol.make_round_fn`` -- reused for
-every round and every seed lane of that cell (the seed count is part
-of the traced shape, so a different number of seeds, like a different
-dataset/mode/n_clients, is a fresh compile).  Each seed lane is an
-independent federation end to end: its own synthetic dataset draw,
-its own vertical partition (independently random where the dataset's
-partitioner is seeded, i.e. titanic; the round-robin datasets
-partition identically at every seed), its own parameter init, its
-own epoch shuffles (all derived from ``PRNGKey(seed)`` exactly as
-``DeVertiFL.train`` derives them, so a sweep lane reproduces the
-corresponding standalone run bit-for-bit).
+A sweep is the cartesian grid  datasets x modes x client_counts x
+seeds.  Since PR 3 the engine stacks BOTH the seed axis and the
+client-count axis on one leading **lane** axis: every (n_clients,
+seed) pair is a lane, all client counts are padded to
+``max(client_counts)`` dead slots (``Layout.pad`` -- see
+repro.core.partition), and one jitted, vmapped round function from
+``repro.core.protocol.make_round_fn`` trains every lane of a
+(dataset, mode) cell group simultaneously.  A dataset x mode grid
+therefore compiles ONCE across all client counts
+(tests/test_padded_engine.py pins the trace count), where previously
+every n_clients value was a separate compile.
 
-Every lane trains on its own canonical column layout
-(``repro.core.partition.canonicalize``): each seed's data is permuted
-at setup by that seed's layout, and the per-seed ``LayoutArrays``
-(slab masks + slice offsets) ride the vmapped seed axis exactly like
-masks used to.  Canonical offsets/sizes are deterministic per
-(dataset, n_clients) -- only the column *assignment* varies across
-seeds -- which is what lets the pallas first-layer path close over
-static offsets even under the seed vmap.
+Each lane is an independent federation end to end: its own synthetic
+dataset draw, its own vertical partition, its own parameter init
+(live clients' init keys are exactly the unpadded derivation -- see
+``protocol.init_padded_params``), its own epoch shuffles, all derived
+from ``PRNGKey(seed)`` exactly as ``DeVertiFL.train`` derives them.
+A masked-lane padded sweep reproduces the corresponding standalone
+runs bit-for-bit; the shape-uniform gather-slice first layer (below)
+is allclose instead, because its contraction length is padded.
 
-``run_cell`` trains one cell and reports per-seed and mean/std F1/acc;
-``run_grid`` walks the whole grid -- reproducing the paper's
-Table-2-style comparison (devertifl vs. non_federated vs. verticomb)
-in one call -- and returns ``{"cells": {"ds/mode/n": {...}}}`` plus a
-per-(dataset, n_clients) mode comparison in ``"compare"``.
+Device scale-out
+----------------
+Lanes have no cross-lane dataflow, so ``run_padded_cells`` distributes
+them over the device mesh with ``repro.compat.shard_map`` under the
+``repro.sharding`` rules ("sweep_lane" -> the data-parallel mesh
+axes).  The lane axis is split over the largest device count that
+divides it; on a single device the shard_map is skipped.  Sharded and
+single-device sweeps produce identical results (pinned in
+tests/test_padded_engine.py).
+
+First layer under the lane vmap
+-------------------------------
+Canonical offsets/sizes are static per (dataset, n_clients), so the
+per-federation slice/pallas paths close over them -- which is exactly
+what a cross-client-count trace cannot do.  The padded sweep instead
+uses ``make_uniform_first_layer_fn``: a gather-slice of static width
+``max(F_i)`` whose offsets AND sizes ride the traced LayoutArrays,
+with out-of-slice columns masked to exact zeros.  first_layer="masked"
+keeps the fully-traced zeropad reference (and bitwise standalone
+equivalence); "slice"/"pallas"/"auto" resolve to the gather-slice
+variant under the lane vmap (a pallas lane needs the scalar-prefetch
+offset from the ROADMAP before it can vary offsets per lane).
+
+``run_cell`` (per-count, seed-vmapped only) is retained for
+single-cell use -- benchmarks/table2.py and examples drive it --
+and as the "looped" baseline the sweep benchmark compares against.
+``run_grid`` walks datasets x modes, one padded multi-count batch
+each, and returns the same {"cells": {"ds/mode/n": ...}} schema as
+before.
+
+See docs/ARCHITECTURE.md for the Layout/LayoutArrays and key
+derivation contracts this engine rides on.
 """
 from __future__ import annotations
 
@@ -45,10 +67,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sharding as sh
+from repro.compat import shard_map
 from repro.configs import get_config
 from repro.core import partition as PT
-from repro.core.protocol import (ARCH_FOR, ProtocolConfig, make_perm_fn,
-                                 make_predict_fn, make_round_fn, train_keys)
+from repro.core.protocol import (ARCH_FOR, ProtocolConfig,
+                                 init_padded_params, make_perm_fn,
+                                 make_predict_fn, make_round_fn,
+                                 resolve_first_layer, train_keys)
 from repro.data import synthetic as SD
 from repro.metrics import accuracy, f1_score
 from repro.models.mlp_model import PaperMLP
@@ -71,11 +97,55 @@ class SweepConfig:
     first_layer: str = "auto"           # auto | pallas | slice | masked
 
 
+# ---------------------------------------------------------------------------
+# shape-uniform first layer for the (seed x client-count) lane vmap
+# ---------------------------------------------------------------------------
+def make_uniform_first_layer_fn(width: int):
+    """first(params, xb, lay) -> [n_clients, B, H] layer-0 activations
+    where offsets AND sizes are read from the traced LayoutArrays, so
+    a single trace serves lanes with different client counts.
+
+    Client i's slice is gathered as the ``width`` columns starting at
+    lay.offsets[i]; columns past lay.sizes[i] are masked to exact
+    zeros before the matmul, so they contribute +0.0 terms.  width is
+    the max live slice length across all lanes (static).  Because the
+    contraction runs over ``width`` terms instead of F_i, results are
+    allclose -- not bitwise -- to the per-federation dynamic_slice
+    path.  Dead slots (size 0) produce relu(bias), matching the
+    per-federation engines' dead_h1."""
+    iota = jnp.arange(width)
+
+    def first(params, xb, lay):
+        w = params["layer_0"]["kernel"]     # [n, F, H]
+        b = params["layer_0"]["bias"]       # [n, H]
+
+        def one(w_i, b_i, off, size):
+            valid = (iota < size)
+            cols = jnp.where(valid, off + iota, 0)
+            x_i = xb[:, cols] * valid.astype(xb.dtype)[None, :]
+            return jax.nn.relu(x_i @ w_i[cols] + b_i)
+
+        return jax.vmap(one)(w, b, lay.offsets, lay.sizes)
+    return first
+
+
+def _sweep_first_layer(pcfg, width):
+    """Resolve the first layer for a lane-vmapped sweep: masked stays
+    masked (fully traced already); slice/pallas/auto take the uniform
+    gather-slice (static pallas offsets cannot vary across lanes)."""
+    if resolve_first_layer(pcfg) == "masked":
+        return None
+    return make_uniform_first_layer_fn(width)
+
+
+# ---------------------------------------------------------------------------
+# lane stacking
+# ---------------------------------------------------------------------------
 def _stacked_federations(dataset, n_clients, seeds, n_samples):
     """Per-seed datasets, canonical layouts and keys stacked on axis 0.
     Data is permuted into each seed's canonical column order; the
-    LayoutArrays (masks + offsets) carry the per-seed layout through
-    the vmapped round."""
+    LayoutArrays (masks/offsets/sizes/client_mask) carry the per-seed
+    layout through the vmapped round."""
     xtr, ytr, xte, yte = SD.make_dataset_stack(dataset, seeds, n=n_samples)
     layouts = [PT.make_layout(dataset, xtr.shape[-1], n_clients, seed=s)
                for s in seeds]
@@ -96,9 +166,81 @@ def _stacked_federations(dataset, n_clients, seeds, n_samples):
     return xtr, ytr, xte, yte, lay, keys, layouts[0]
 
 
+def _stacked_lanes(dataset, client_counts, seeds, n_samples):
+    """Stack every (n_clients, seed) pair on one lane axis, padded to
+    max(client_counts).  Returns (xtr, ytr, xte, yte, lay, keys,
+    lanes, width): lanes is the [(n_clients, seed), ...] order
+    (count-major), width the max live slice length."""
+    max_c = max(client_counts)
+    xtr, ytr, xte, yte = SD.make_dataset_stack(dataset, seeds, n=n_samples)
+    xs_tr, xs_te, lays, lanes, width = [], [], [], [], 1
+    for nc in client_counts:
+        for si, s in enumerate(seeds):
+            lo = PT.make_layout(dataset, xtr.shape[-1], nc, seed=s,
+                                max_clients=max_c)
+            lanes.append((nc, s))
+            width = max(width, max(lo.sizes))
+            xs_tr.append(lo.apply(xtr[si]))
+            xs_te.append(lo.apply(xte[si]))
+            lays.append(lo.arrays())
+    n_rep = len(client_counts)
+    lay = jax.tree.map(lambda *a: jnp.stack(a), *lays)
+    keys = jnp.stack([jax.random.PRNGKey(s) for _, s in lanes])
+    return (jnp.asarray(np.stack(xs_tr)),
+            jnp.asarray(np.concatenate([ytr] * n_rep)),
+            jnp.asarray(np.stack(xs_te)),
+            jnp.asarray(np.concatenate([yte] * n_rep)),
+            lay, keys, lanes, width)
+
+
+def _lane_metrics(preds, yte, ytr, lanes):
+    """Per-lane mean-over-live-clients F1/acc from padded predictions
+    [L, max_clients, B_test]."""
+    f1s, accs = [], []
+    for li, (nc, _) in enumerate(lanes):
+        avg = "macro" if len(np.unique(ytr[li])) > 2 else "binary"
+        f1s.append(float(np.mean([f1_score(yte[li], preds[li, i],
+                                           average=avg)
+                                  for i in range(nc)])))
+        accs.append(float(np.mean([accuracy(yte[li], preds[li, i])
+                                   for i in range(nc)])))
+    return f1s, accs
+
+
+def _train_rounds(vround, vfold, params, opt_state, loop_keys, xtr, ytr,
+                  lay, rounds):
+    """Drive `rounds` vmapped rounds and time STEADY STATE only: round
+    0 triggers the jit compile, so the clock restarts after it (with
+    rounds == 1 the compile is unavoidably included -- matching
+    benchmarks/protocol_bench's warmed-up timings).  Shared by
+    run_cell and run_padded_cells so the looped-vs-padded benchmark
+    comparison can never diverge on timing protocol.  Returns
+    (params, opt_state, losses, wall, timed_rounds)."""
+    step_idx = jnp.zeros((loop_keys.shape[0],), jnp.int32)
+    t0 = time.perf_counter()
+    losses = None
+    timed_rounds = rounds
+    for r in range(rounds):
+        params, opt_state, step_idx, losses = vround(
+            params, opt_state, step_idx, vfold(loop_keys, r),
+            xtr, ytr, lay)
+        if r == 0 and rounds > 1:
+            jax.block_until_ready(losses)
+            t0 = time.perf_counter()
+            timed_rounds = rounds - 1
+    jax.block_until_ready(losses)
+    return (params, opt_state, losses, time.perf_counter() - t0,
+            timed_rounds)
+
+
+# ---------------------------------------------------------------------------
+# single-cell (per-count) runner -- the pre-padding engine, retained
+# ---------------------------------------------------------------------------
 def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     """Train len(scfg.seeds) federations of one (dataset, mode,
-    n_clients) cell in a single vmapped computation."""
+    n_clients) cell in a single vmapped computation.  One compile per
+    (dataset, mode, n_clients): the looped baseline the padded
+    multi-count engine (run_padded_cells) is benchmarked against."""
     pcfg = ProtocolConfig(
         dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
@@ -124,33 +266,14 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     vpred = jax.jit(jax.vmap(make_predict_fn(model, pcfg, layout=layout)))
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
-    step_idx = jnp.zeros((n_seeds,), jnp.int32)
-    # round 0 triggers the jit compile; time the steady-state rounds
-    # only (matching benchmarks/protocol_bench's warmed-up timings).
-    # With rounds == 1 the compile is unavoidably included.
-    t0 = time.perf_counter()
-    losses = None
-    timed_rounds = pcfg.rounds
-    for r in range(pcfg.rounds):
-        params, opt_state, step_idx, losses = vround(
-            params, opt_state, step_idx, vfold(loop_keys, r),
-            xtr, ytr, lay)
-        if r == 0 and pcfg.rounds > 1:
-            jax.block_until_ready(losses)
-            t0 = time.perf_counter()
-            timed_rounds = pcfg.rounds - 1
-    jax.block_until_ready(losses)
-    wall = time.perf_counter() - t0
+    params, opt_state, losses, wall, timed_rounds = _train_rounds(
+        vround, vfold, params, opt_state, loop_keys, xtr, ytr, lay,
+        pcfg.rounds)
 
     preds = np.asarray(vpred(params, xte, lay))      # [S, n, B_test]
     yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
-    f1s, accs = [], []
-    for s in range(n_seeds):
-        avg = "macro" if len(np.unique(ytr_np[s])) > 2 else "binary"
-        f1s.append(float(np.mean([f1_score(yte_np[s], preds[s, i], average=avg)
-                                  for i in range(n_clients)])))
-        accs.append(float(np.mean([accuracy(yte_np[s], preds[s, i])
-                                   for i in range(n_clients)])))
+    f1s, accs = _lane_metrics(preds, yte_np, ytr_np,
+                              [(n_clients, s) for s in scfg.seeds])
     steps = timed_rounds * pcfg.epochs * make_perm_fn(pcfg,
                                                       n_train).n_batches
     return {
@@ -165,14 +288,145 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     }
 
 
-def run_grid(scfg: SweepConfig = SweepConfig()):
-    """Walk the full datasets x modes x client_counts grid.  Returns
-    {"cells": {key: cell}, "compare": {ds/n: {mode: f1_mean}}} where
-    key = "dataset/mode/n_clients"."""
+# ---------------------------------------------------------------------------
+# padded multi-count engine: one compile per (dataset, mode), lanes
+# sharded over the device mesh
+# ---------------------------------------------------------------------------
+def _lane_shards(n_lanes: int, shard) -> int:
+    """How many devices to split the lane axis over: the largest
+    available device count dividing n_lanes (1 = no shard_map).
+    shard=False forces single-device; an int requests that many."""
+    if shard is False:
+        return 1
+    avail = jax.device_count()
+    if isinstance(shard, int) and not isinstance(shard, bool):
+        if n_lanes % shard or shard > avail:
+            raise ValueError(f"cannot shard {n_lanes} lanes over "
+                             f"{shard} of {avail} devices")
+        return shard
+    return max(d for d in range(1, avail + 1) if n_lanes % d == 0)
+
+
+def run_padded_cells(dataset, mode, scfg: SweepConfig, shard="auto"):
+    """Train the FULL client_counts x seeds lane batch of one
+    (dataset, mode) pair under a single compiled round function,
+    distributing lanes over the device mesh.
+
+    Returns {"cells": {n_clients: cell_dict}, "round_traces": int,
+    "lanes": int, "devices": int, "wall_s": float, "cells_per_sec":
+    float, "steps_per_sec": float} where each cell_dict has the
+    run_cell schema -- except that wall_s is the SHARED batch wall and
+    each cell's steps_per_sec is its lanes' share of it (cells sum to
+    the batch's steps_per_sec).  round_traces counts actual retraces
+    of the round body -- 1 means the whole multi-count batch ran on
+    one compile (pinned in tests).
+    shard: "auto" (largest dividing device count) | False | int.
+    """
+    counts = tuple(scfg.client_counts)
+    max_c = max(counts)
+    # n_clients=min(counts) keeps ProtocolConfig's padded/unpadded
+    # distinction truthful (lanes carry n_real in [min, max]), so
+    # make_round_fn's mask-blind-aggregator guard stays armed whenever
+    # any lane actually has dead slots
+    pcfg = ProtocolConfig(
+        dataset=dataset, n_clients=min(counts), max_clients=max_c,
+        rounds=scfg.rounds, epochs=scfg.epochs,
+        batch_size=scfg.batch_size, lr=scfg.lr,
+        exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
+        n_samples=scfg.n_samples, first_layer=scfg.first_layer)
+    model = PaperMLP(get_config(ARCH_FOR[dataset]))
+    opt = adam(pcfg.lr, max_grad_norm=None)
+
+    xtr, ytr, xte, yte, lay, keys, lanes, width = _stacked_lanes(
+        dataset, counts, scfg.seeds, scfg.n_samples)
+    n_lanes, n_train = xtr.shape[0], xtr.shape[1]
+    first = _sweep_first_layer(pcfg, width)
+
+    # per-count init (live keys must be split(init_key, nc) -- a
+    # count-static derivation -- so init compiles once per count;
+    # only the ROUND is the compile-once claim)
+    ps, os_, lks = [], [], []
+    for ci, nc in enumerate(counts):
+        def init_one(key, nc=nc):
+            init_key, loop_key = train_keys(key)
+            params = init_padded_params(model, init_key, nc, max_c)
+            return params, jax.vmap(opt.init)(params), loop_key
+        s = len(scfg.seeds)
+        p, o, lk = jax.jit(jax.vmap(init_one))(keys[ci * s:(ci + 1) * s])
+        ps.append(p), os_.append(o), lks.append(lk)
+    params = jax.tree.map(lambda *a: jnp.concatenate(a), *ps)
+    opt_state = jax.tree.map(lambda *a: jnp.concatenate(a), *os_)
+    loop_keys = jnp.concatenate(lks)
+
+    round_fn = make_round_fn(model, opt, pcfg, n_train,
+                             first_layer_fn=first)
+    traces = 0
+
+    def counted_round(*args):
+        nonlocal traces
+        traces += 1
+        return round_fn(*args)
+
+    vround = jax.vmap(counted_round)
+    n_dev = _lane_shards(n_lanes, shard)
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        with sh.use_context(mesh):
+            spec = sh.logical_spec("sweep_lane")    # -> P("data")
+        vround = shard_map(vround, mesh=mesh, in_specs=(spec,) * 7,
+                           out_specs=spec, check_vma=False)
+    vround = jax.jit(vround, donate_argnums=(0, 1))
+    vpred = jax.jit(jax.vmap(
+        make_predict_fn(model, pcfg, first_layer_fn=first)))
+    vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
+
+    params, opt_state, losses, wall, timed_rounds = _train_rounds(
+        vround, vfold, params, opt_state, loop_keys, xtr, ytr, lay,
+        pcfg.rounds)
+
+    preds = np.asarray(vpred(params, xte, lay))   # [L, max_c, B_test]
+    yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
+    f1s, accs = _lane_metrics(preds, yte_np, ytr_np, lanes)
+    losses_np = np.asarray(losses)
+    steps = timed_rounds * pcfg.epochs * make_perm_fn(pcfg,
+                                                      n_train).n_batches
+    cells = {}
+    s = len(scfg.seeds)
+    for ci, nc in enumerate(counts):
+        sl = slice(ci * s, (ci + 1) * s)
+        cells[nc] = {
+            "dataset": dataset, "mode": mode, "n_clients": nc,
+            "seeds": list(scfg.seeds),
+            "f1_per_seed": f1s[sl], "acc_per_seed": accs[sl],
+            "f1_mean": float(np.mean(f1s[sl])),
+            "f1_std": float(np.std(f1s[sl])),
+            "acc_mean": float(np.mean(accs[sl])),
+            "final_loss_mean": float(losses_np[sl, -1].mean()),
+            # the whole multi-count batch trains together, so wall_s is
+            # SHARED across this group's cells and each cell's
+            # steps_per_sec is its own lanes' steps over that shared
+            # wall (cells sum to the batch throughput -- do not read a
+            # single padded cell's rate as a run_cell-style standalone
+            # measurement)
+            "wall_s": wall,
+            "steps_per_sec": steps * s / max(wall, 1e-9),
+        }
+    return {"cells": cells, "round_traces": traces, "lanes": n_lanes,
+            "devices": n_dev, "wall_s": wall,
+            "cells_per_sec": len(counts) / max(wall, 1e-9),
+            "steps_per_sec": steps * n_lanes / max(wall, 1e-9)}
+
+
+def run_grid(scfg: SweepConfig = SweepConfig(), shard="auto"):
+    """Walk the full datasets x modes x client_counts grid -- one
+    padded lane batch (ONE round compile, lanes sharded over devices)
+    per (dataset, mode).  Returns {"cells": {key: cell}, "compare":
+    {ds/n: {mode: f1_mean}}} where key = "dataset/mode/n_clients",
+    exactly the pre-padding schema."""
     cells, compare = {}, {}
-    for ds, mode, nc in itertools.product(scfg.datasets, scfg.modes,
-                                          scfg.client_counts):
-        cell = run_cell(ds, mode, nc, scfg)
-        cells[f"{ds}/{mode}/{nc}"] = cell
-        compare.setdefault(f"{ds}/{nc}", {})[mode] = cell["f1_mean"]
+    for ds, mode in itertools.product(scfg.datasets, scfg.modes):
+        out = run_padded_cells(ds, mode, scfg, shard=shard)
+        for nc, cell in out["cells"].items():
+            cells[f"{ds}/{mode}/{nc}"] = cell
+            compare.setdefault(f"{ds}/{nc}", {})[mode] = cell["f1_mean"]
     return {"cells": cells, "compare": compare}

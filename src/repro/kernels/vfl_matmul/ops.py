@@ -13,6 +13,14 @@ keeps the same block-sparse structure:
 
 Both cotangents are accumulated in fp32 and cast back, matching the
 kernel's fp32 VMEM accumulator.
+
+Padded-client gating: ``vfl_matmul(..., gate=g)`` multiplies the
+output by a traced scalar (a client_mask entry).  Because the gate is
+applied *outside* the custom VJP, autodiff scales both cotangents by
+it -- dx = (g_ct * gate) @ W_slice.T and dW = scatter(x.T @ (g_ct *
+gate)) -- so a masked-out (dead) client lane produces an exact-zero dW
+scatter and dx without a Python-level branch.  gate=1.0 is a bitwise
+identity on y, dx, and dW.
 """
 from __future__ import annotations
 
@@ -54,12 +62,21 @@ _vfl_matmul.defvjp(_vfl_matmul_fwd, _vfl_matmul_bwd)
 
 @functools.partial(jax.jit,
                    static_argnames=("offset", "bm", "bn", "bk", "interpret"))
-def vfl_matmul(x_local, w_full, offset: int, *, bm=128, bn=128, bk=128,
-               interpret=True):
+def vfl_matmul(x_local, w_full, offset: int, *, gate=None, bm=128, bn=128,
+               bk=128, interpret=True):
     """y = zeropad(x_local) @ w_full without materializing the padding.
 
     Differentiable (custom VJP above). interpret defaults to True
     because this container is CPU-only; on TPU pass interpret=False to
     run the compiled kernel.
+
+    gate: optional traced scalar (e.g. a LayoutArrays.client_mask
+    entry) multiplied into the output; gate=0.0 zeroes y AND both
+    gradients (the dW scatter rows come out exactly zero), gate=1.0 is
+    a bitwise no-op.  This is how padded federations mask dead client
+    lanes through the kernel path.
     """
-    return _vfl_matmul(x_local, w_full, offset, bm, bn, bk, interpret)
+    y = _vfl_matmul(x_local, w_full, offset, bm, bn, bk, interpret)
+    if gate is not None:
+        y = y * jnp.asarray(gate, y.dtype)
+    return y

@@ -16,6 +16,10 @@ Logical axes used by the substrate:
   group      MoE dispatch group dim           -> (pod, data)
   client     De-VertiFL client axis           -> model (input block)
   layers     scanned-layer leading dim        -> None
+  sweep_lane sweep (seed x client-count) lane -> (pod, data): every
+             lane is an independent federation, so the sweep engine
+             shard_maps the lane axis over the data-parallel devices
+             with no cross-lane collectives
 """
 from __future__ import annotations
 
@@ -63,6 +67,7 @@ DEFAULT_RULES = AxisRules({
     "group": ("pod", "data"),
     "client": "model",
     "layers": None,
+    "sweep_lane": ("pod", "data"),
     "act_embed": None,           # activations replicated on d_model
     "ssm_inner": "model",
 })
