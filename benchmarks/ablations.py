@@ -16,31 +16,35 @@ import time
 
 import numpy as np
 
-from repro.core import train_federation
+from repro.api import ExperimentSpec, build
 from repro.core.protocol import DeVertiFL, ProtocolConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 
 def exchange_point_ablation(dataset="mnist", n_clients=5, seeds=(0, 1)):
+    """One multi-seed spec per exchange point (the seeds ride the
+    vmapped sweep cell); each entry records its spec_hash."""
     out = {}
     for ex, label in [(-1, "logits (Algorithm 1)"),
                       (1, "hidden layer 1 (Fig. 1 text)"),
                       (2, "hidden layer 2"),
                       (3, "hidden layer 3")]:
-        f1s = []
-        for seed in seeds:
-            r = train_federation(dataset=dataset, n_clients=n_clients,
-                                 rounds=12, epochs=5, n_samples=6000,
-                                 exchange_at=ex, seed=seed)
-            f1s.append(r["final"]["f1"])
-        out[label] = {"f1_mean": float(np.mean(f1s)),
-                      "f1_std": float(np.std(f1s))}
+        spec = ExperimentSpec(dataset=dataset, n_clients=n_clients,
+                              rounds=12, epochs=5, n_samples=6000,
+                              exchange_at=ex, seeds=seeds, eval_every=0)
+        m = build(spec).run().metrics
+        out[label] = {"f1_mean": m["f1"],
+                      "f1_std": m.get("f1_std", 0.0),
+                      "spec_hash": spec.spec_hash}
     return out
 
 
 def weighted_fedavg_ablation(dataset="mnist", n_clients=7, seeds=(0, 1)):
-    """Uniform FedAvg vs feature-count-weighted FedAvg."""
+    """Uniform FedAvg vs feature-count-weighted FedAvg.  Stays on the
+    DeVertiFL engine directly: a custom fedavg_fn is an engine-level
+    knob (set_fedavg) the declarative spec deliberately does not
+    express."""
     import jax
     import jax.numpy as jnp
     out = {}

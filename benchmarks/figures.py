@@ -22,9 +22,7 @@ import json
 import os
 import time
 
-import numpy as np
-
-from repro.core import train_federation
+from repro.api import ExperimentSpec, build
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -40,23 +38,24 @@ _DATASET_SETTINGS = {
 
 def fig_curve(dataset, clients, modes=("devertifl", "non_federated"),
               seeds=(0,), settings=None):
+    """One spec per (n_clients, mode) point: a multi-seed spec rides
+    the seed-vmapped sweep cell (one compile per point), eval_every=0
+    skips the per-round evals the figures never read.  Each point
+    records its spec_hash, joinable to the bench trajectory."""
     st = dict(_DATASET_SETTINGS[dataset])
     st.update(settings or {})
     out = {m: [] for m in modes}
     for nc in clients:
         for mode in modes:
-            f1s = []
-            for seed in seeds:
-                kw = dict(dataset=dataset, n_clients=nc, mode=mode,
-                          seed=seed, **st)
-                if mode == "non_federated":
-                    kw["fedavg"] = False
-                r = train_federation(**kw)
-                f1s.append(r["final"]["f1"])
+            spec = ExperimentSpec(dataset=dataset, n_clients=nc,
+                                  mode=mode, seeds=seeds, eval_every=0,
+                                  fedavg=(mode != "non_federated"), **st)
+            m = build(spec).run().metrics
             out[mode].append({"n_clients": nc,
-                              "f1_mean": float(np.mean(f1s)),
-                              "f1_std": float(np.std(f1s)),
-                              "n_seeds": len(seeds)})
+                              "f1_mean": m["f1"],
+                              "f1_std": m.get("f1_std", 0.0),
+                              "n_seeds": len(seeds),
+                              "spec_hash": spec.spec_hash})
     return out
 
 

@@ -15,11 +15,13 @@ Appends one dated, git-SHA-keyed entry per run to
 benchmarks/results/BENCH_protocol.json (a list), so the perf
 trajectory accumulates across PRs instead of being overwritten:
 
-  [{"date": ..., "git_sha": ..., "config": {...},
+  [{"date": ..., "git_sha": ..., "spec_hash": ...,
+    "spec_hashes": {lane: ...}, "config": {...},
     "engines": {"loop": sps, "masked": sps, "slice": sps,
                 "pallas": sps},
     "slice_speedup_vs_masked": ..., "scan_speedup_vs_loop": ...,
-    "sweep": {"client_counts": [...], "n_seeds": ...,
+    "sweep": {"client_counts": [...], "spec_hashes": {n: ...},
+              "n_seeds": ...,
               "looped_cells_per_sec": ..., "padded_cells_per_sec": ...,
               "sharded_cells_per_sec": ..., "devices": ...,
               "round_traces": ...}}, ...]
@@ -36,29 +38,21 @@ from __future__ import annotations
 import datetime
 import json
 import os
-import subprocess
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
-from repro.core.sweep import SweepConfig, run_cell, run_padded_cells
+from repro.api import (ExperimentSpec, build, git_sha as _git_sha,
+                       spec_grid, sweep_config_for_specs)
+from repro.core.protocol import train_keys
+from repro.core.sweep import run_cell, run_padded_cells
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
 # the paper's MNIST configuration, sized so one round is ~100 steps
 BENCH_CFG = dict(dataset="mnist", n_clients=3, epochs=2, n_samples=4000)
 SMOKE_CFG = dict(dataset="mnist", n_clients=3, epochs=1, n_samples=640)
-
-
-def _git_sha():
-    try:
-        return subprocess.check_output(
-            ["git", "describe", "--always", "--dirty"],
-            cwd=os.path.dirname(__file__), text=True).strip()
-    except Exception:
-        return "unknown"
 
 
 def _append_entry(entry, path):
@@ -108,25 +102,35 @@ def run(smoke=False, results_path=None, iters=None):
     rkey = jax.random.fold_in(lk, 0)
     si = jnp.zeros((), jnp.int32)
 
-    engines = {}
+    base_spec = ExperimentSpec(rounds=1, seeds=(0,), eval_every=0, **cfg)
+    engines, spec_hashes = {}, {}
     n_steps = None
     for fl in ("masked", "slice", "pallas"):
-        fed = DeVertiFL(ProtocolConfig(rounds=1, first_layer=fl, **cfg))
+        lane_spec = base_spec.replace(first_layer=fl)
+        spec_hashes[fl] = lane_spec.spec_hash
+        fed = build(lane_spec).federation
         n_steps = fed.pcfg.epochs * fed.n_batches
         engines[fl] = _bench_engine(
             fed, lambda p, o: fed._round(p, o, si, rkey, fed._xtr,
                                          fed._ytr, fed._lay),
             n_steps, iters=iters)
         if fl == "masked":
+            spec_hashes["loop"] = lane_spec.replace(
+                engine="python").spec_hash
             engines["loop"] = _bench_engine(
                 fed, lambda p, o: fed._python_round(p, o, si, rkey),
                 n_steps, iters=iters)
 
-    sweep_scfg = (SweepConfig(seeds=(0, 1), rounds=2, epochs=1,
-                              n_samples=512, client_counts=(2, 3))
-                  if smoke else
-                  SweepConfig(seeds=(0, 1, 2, 3), rounds=2, epochs=2,
-                              n_samples=2000, client_counts=(2, 3, 5)))
+    # the sweep lane's config is DERIVED from its spec grid, so the
+    # spec_hashes stamped below can never diverge from what is timed
+    sweep_specs = spec_grid(
+        datasets=("mnist",), modes=("devertifl",),
+        **(dict(client_counts=(2, 3), seeds=(0, 1), rounds=2, epochs=1,
+                n_samples=512)
+           if smoke else
+           dict(client_counts=(2, 3, 5), seeds=(0, 1, 2, 3), rounds=2,
+                epochs=2, n_samples=2000)))
+    _, _, sweep_scfg = sweep_config_for_specs(sweep_specs)
     counts = tuple(sweep_scfg.client_counts)
     # all three lanes are timed END-TO-END (data stacking + compiles +
     # training + eval): compile amortization is the padded engine's
@@ -153,6 +157,14 @@ def run(smoke=False, results_path=None, iters=None):
         sharded, sharded_wall = padded, padded_wall
     sweep_entry = {
         "client_counts": list(counts),
+        # spec ids of the per-count experiments this sweep covers,
+        # keyed by n_clients (the very specs sweep_scfg was derived
+        # from).  NOTE these identify the experiment CONFIGURATION:
+        # the padded multi-count engine executes the gather-slice
+        # first-layer lane, which is allclose -- not bitwise -- to
+        # these specs' standalone runs (see repro.core.sweep docs)
+        "spec_hashes": {str(s.n_clients): s.spec_hash
+                        for s in sweep_specs},
         "n_seeds": len(sweep_scfg.seeds),
         "looped_cells_per_sec": len(counts) / max(looped_wall, 1e-9),
         "padded_cells_per_sec": len(counts) / max(padded_wall, 1e-9),
@@ -173,6 +185,11 @@ def run(smoke=False, results_path=None, iters=None):
         "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds"),
         "git_sha": _git_sha(),
+        # joinability: spec_hash identifies the base bench experiment
+        # (repro.api.ExperimentSpec.spec_hash); spec_hashes maps each
+        # engine lane to the exact spec it timed
+        "spec_hash": base_spec.spec_hash,
+        "spec_hashes": spec_hashes,
         # on non-TPU backends the pallas lane times the interpreter,
         # not the compiled kernel -- record the backend so trajectory
         # entries from different machines stay comparable

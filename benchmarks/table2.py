@@ -9,9 +9,12 @@ centralized split-learning implementation under the SAME participant
 count and round budget, vs De-VertiFL under identical conditions --
 matching the paper's comparison protocol (section IV-E).
 
-The De-VertiFL side runs on the sweep engine (repro.core.sweep): each
-row is one seed-vmapped cell, so per-seed federations share a single
-compiled scan-based round function.
+Both sides of every row are declarative ``repro.api`` specs: the
+De-VertiFL side is one federated session (a standalone scan-fused run
+for one seed -- bit-for-bit the sweep lane -- or the seed-vmapped
+sweep cell for several), the baseline is the same spec with
+``mode="splitnn"``.  Each row records both specs' hashes so the JSON
+is joinable to the exact configurations that produced it.
 """
 from __future__ import annotations
 
@@ -19,8 +22,7 @@ import json
 import os
 import time
 
-from repro.core.baselines import SplitNN, SplitNNConfig
-from repro.core.sweep import SweepConfig, run_cell
+from repro.api import ExperimentSpec, build
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -37,25 +39,28 @@ def run(seeds=(0,)):
     for name, ds, nc, rounds, epochs, metric in cases:
         t0 = time.time()
         n_samples = 6000 if ds in ("mnist", "fmnist") else None
-        cell = run_cell(ds, "devertifl", nc,
-                        SweepConfig(seeds=seeds, rounds=rounds,
-                                    epochs=epochs, n_samples=n_samples))
-        base = SplitNN(SplitNNConfig(
-            dataset=ds, n_clients=nc, rounds=rounds, epochs=epochs,
-            n_samples=n_samples)).train()
+        fed_spec = ExperimentSpec(
+            dataset=ds, mode="devertifl", n_clients=nc, rounds=rounds,
+            epochs=epochs, seeds=seeds, n_samples=n_samples,
+            eval_every=0)   # final metrics only, as the sweep cell does
+        base_spec = fed_spec.replace(mode="splitnn", seeds=(0,))
+        fed = build(fed_spec).run()
+        base = build(base_spec).run()
         dt = time.time() - t0
+        fm = fed.metrics
         table[name] = {
-            "devertifl": {"f1": cell["f1_mean"], "acc": cell["acc_mean"],
-                          "f1_std": cell["f1_std"],
-                          "seeds": cell["seeds"]},
-            "split_baseline": base,
+            "devertifl": {"f1": fm["f1"], "acc": fm["acc"],
+                          "f1_std": fm.get("f1_std", 0.0),
+                          "seeds": list(seeds),
+                          "spec_hash": fed.spec_hash},
+            "split_baseline": dict(base.metrics,
+                                   spec_hash=base.spec_hash),
             "metric": metric,
         }
-        fed_metric = cell[f"{metric}_mean"]
         rows.append((f"table2/{name}/devertifl", dt * 1e6,
-                     f"{metric}={fed_metric:.3f}"))
+                     f"{metric}={fm[metric]:.3f}"))
         rows.append((f"table2/{name}/baseline", dt * 1e6,
-                     f"{metric}={base[metric]:.3f}"))
+                     f"{metric}={base.metrics[metric]:.3f}"))
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "table2.json"), "w") as f:
         json.dump(table, f, indent=1)

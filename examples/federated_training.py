@@ -1,53 +1,34 @@
 """The paper in one script: De-VertiFL vs non-federated training on the
 synthetic MNIST stand-in with vertically partitioned features, driven
-by the scan-based federation engine.
+by the declarative repro.api front door.
 
   PYTHONPATH=src python examples/federated_training.py --clients 5
 
-With --seeds k > 1 the comparison runs on the sweep engine instead:
-k federations per mode are trained simultaneously (vmapped over the
-seed axis, one compilation per mode) and mean +/- std F1 is reported.
+Each comparison side is one ExperimentSpec; ``build(spec).run()``
+picks the engine -- a standalone scan-fused federation for one seed,
+the seed-vmapped sweep cell (one compile per mode) for ``--seeds k``
+> 1 -- and returns a RunResult with mean +/- std F1.
+
+  --smoke runs the reduced CI configuration (titanic, 2 rounds) --
+  the examples-smoke lane in scripts/ci.sh.
 """
 import argparse
 
-from repro.core import train_federation
-from repro.core.sweep import SweepConfig, run_cell
+from repro.api import ExperimentSpec, build
 
 
-def run_single(args, common):
-    print(f"De-VertiFL: {args.clients} clients, {args.dataset}, "
-          f"{args.rounds} rounds x {args.epochs} epochs "
-          f"[engine={args.engine}]")
-    fed = train_federation(engine=args.engine, **common)
-    for h in fed["history"][:: max(1, args.rounds // 5)]:
-        print(f"  round {h['round']:3d}  F1={h['f1']:.3f}  "
-              f"loss={h['loss']:.3f}")
-    print(f"  final F1={fed['final']['f1']:.3f}  "
-          f"acc={fed['final']['acc']:.3f}")
-
-    print("non-federated baseline (no exchange, no FedAvg):")
-    non = train_federation(mode="non_federated", fedavg=False,
-                           engine=args.engine, **common)
-    print(f"  final F1={non['final']['f1']:.3f}  "
-          f"acc={non['final']['acc']:.3f}")
-    return fed["final"]["f1"], non["final"]["f1"]
-
-
-def run_sweep(args, common):
-    seeds = tuple(range(args.seeds))
-    print(f"De-VertiFL sweep: {args.clients} clients, {args.dataset}, "
-          f"{args.rounds} rounds x {args.epochs} epochs, seeds {seeds}")
-    scfg = SweepConfig(seeds=seeds, rounds=args.rounds,
-                       epochs=args.epochs, n_samples=common["n_samples"],
-                       first_layer=common["first_layer"])
-    fed = run_cell(args.dataset, "devertifl", args.clients, scfg)
-    non = run_cell(args.dataset, "non_federated", args.clients, scfg)
-    for name, cell in (("devertifl", fed), ("non-federated", non)):
-        print(f"  {name:14s} F1={cell['f1_mean']:.3f}"
-              f" +/- {cell['f1_std']:.3f}"
-              f"  ({cell['steps_per_sec']:.0f} steps/s across "
-              f"{len(seeds)} federations)")
-    return fed["f1_mean"], non["f1_mean"]
+def report(name, rr):
+    m = rr.metrics
+    if "f1_std" in m:
+        print(f"  {name:14s} F1={m['f1']:.3f} +/- {m['f1_std']:.3f}  "
+              f"({rr.timings['steps_per_sec']:.0f} steps/s across "
+              f"{len(rr.spec.seeds)} federations)")
+    else:
+        for h in rr.history[:: max(1, rr.spec.rounds // 5)]:
+            print(f"  round {h['round']:3d}  F1={h['f1']:.3f}  "
+                  f"loss={h['loss']:.3f}")
+        print(f"  {name:14s} final F1={m['f1']:.3f}  acc={m['acc']:.3f}")
+    return m["f1"]
 
 
 def main():
@@ -69,20 +50,35 @@ def main():
                          "auto = pallas on TPU, slice elsewhere")
     ap.add_argument("--seeds", type=int, default=1,
                     help=">1 runs the vmapped multi-seed sweep")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI config: titanic, 3 clients, "
+                         "2 rounds x 1 epoch, 2 seeds (~seconds)")
     args = ap.parse_args()
-    if args.seeds > 1 and args.engine != "scan":
-        ap.error("--seeds > 1 runs the vmapped sweep, which only "
-                 "supports --engine scan")
+    if args.smoke:
+        args.dataset, args.clients = "titanic", 3
+        args.rounds, args.epochs, args.seeds = 2, 1, 2
 
     n = 6000 if args.dataset in ("mnist", "fmnist") else None
-    common = dict(dataset=args.dataset, n_clients=args.clients,
-                  rounds=args.rounds, epochs=args.epochs, n_samples=n,
-                  first_layer=args.first_layer)
+    try:
+        spec = ExperimentSpec(
+            dataset=args.dataset, mode="devertifl",
+            n_clients=args.clients, rounds=args.rounds,
+            epochs=args.epochs, n_samples=n, engine=args.engine,
+            first_layer=args.first_layer,
+            seeds=tuple(range(args.seeds)))
+    except ValueError as e:
+        ap.error(str(e))    # e.g. --seeds >1 with --engine python
 
-    if args.seeds > 1:
-        fed_f1, non_f1 = run_sweep(args, common)
-    else:
-        fed_f1, non_f1 = run_single(args, common)
+    print(f"De-VertiFL: {args.clients} clients, {args.dataset}, "
+          f"{args.rounds} rounds x {args.epochs} epochs "
+          f"[engine={spec.engine}, seeds={spec.seeds}, "
+          f"spec={spec.spec_hash}]")
+    fed_f1 = report("devertifl", build(spec).run())
+
+    print("non-federated baseline (no exchange, no FedAvg):")
+    non_f1 = report("non-federated", build(spec.replace(
+        mode="non_federated", fedavg=False)).run())
+
     gain = fed_f1 - non_f1
     print(f"collaboration gain: {gain:+.3f} F1 "
           f"({'matches' if gain > 0 else 'CONTRADICTS'} the paper's claim)")

@@ -1,17 +1,51 @@
 #!/usr/bin/env bash
-# Fast CI gate: the `fast` pytest marker suite plus the benchmark smoke
-# lane (protocol engine + sweep throughput at toy sizes, no result-file
-# writes).  Keeps the README quickstart commands and the smoke lanes
-# from rotting.  Full tier-1 is `PYTHONPATH=src python -m pytest -x -q`.
+# Fast CI gate, lane-selectable:
+#
+#   scripts/ci.sh                 # all lanes (local pre-commit default)
+#   scripts/ci.sh fast bench      # `fast` pytest marker + bench smoke
+#   scripts/ci.sh examples        # examples smoke (reduced configs)
+#
+# Lanes: fast (the `fast` pytest marker suite), bench
+# (benchmarks/run.py --smoke: protocol engine + sweep throughput at toy
+# sizes, no result-file writes), examples (examples/quickstart.py and
+# examples/federated_training.py --smoke -- keeps the spec-driven
+# README snippets from rotting).  Full tier-1 is
+# `PYTHONPATH=src python -m pytest -x -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== pytest -m fast =="
-python -m pytest -q -m fast
+LANES=("${@:-all}")
+for lane in "${LANES[@]}"; do
+  case "$lane" in
+    all|fast|bench|examples) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench examples)" >&2
+       exit 2 ;;
+  esac
+done
+want() {
+  local lane
+  for lane in "${LANES[@]}"; do
+    [[ "$lane" == "all" || "$lane" == "$1" ]] && return 0
+  done
+  return 1
+}
 
-echo "== benchmarks/run.py --smoke =="
-python -m benchmarks.run --smoke
+if want fast; then
+  echo "== pytest -m fast =="
+  python -m pytest -q -m fast
+fi
 
-echo "ci.sh: all green"
+if want bench; then
+  echo "== benchmarks/run.py --smoke =="
+  python -m benchmarks.run --smoke
+fi
+
+if want examples; then
+  echo "== examples smoke (reduced config) =="
+  python examples/quickstart.py
+  python examples/federated_training.py --smoke
+fi
+
+echo "ci.sh: all green (${LANES[*]})"

@@ -1,0 +1,45 @@
+"""repro.api -- the one front door to De-VertiFL experiments.
+
+Declare WHAT to run as a frozen, hashable :class:`ExperimentSpec`
+(validated eagerly against the dataset / mode / first-layer
+registries), then :func:`build` it into a :class:`Session` and run::
+
+    from repro.api import ExperimentSpec, build
+
+    spec = ExperimentSpec(dataset="mnist", mode="devertifl",
+                          n_clients=5, rounds=5)
+    result = build(spec).run()          # -> RunResult
+    print(result.metrics, result.spec_hash)
+
+Grids ride the same spec type -- :func:`spec_grid` enumerates the
+datasets x modes x client_counts cartesian, :func:`run_grid` trains it
+with one compiled round per (dataset, mode) and the lanes sharded over
+the device mesh (exactly ``repro.core.sweep``'s engine)::
+
+    grid = run_grid(spec_grid(datasets=("mnist",), seeds=(0, 1)))
+
+Extend any axis through the registries: :func:`register_dataset`,
+:func:`register_mode`, :func:`register_first_layer`.  Legacy entry
+points (``train_federation``, ``ProtocolConfig``, ``SweepConfig``)
+remain as thin internals underneath; spec-driven runs reproduce them
+bit-for-bit (tests/test_api.py).  Contracts: docs/ARCHITECTURE.md
+("Spec & registry contracts").
+"""
+from repro.api.spec import ExperimentSpec, HASH_EXCLUDE  # noqa: F401
+from repro.api.modes import (  # noqa: F401
+    ModeEntry, get_mode, mode_names, register_mode,
+)
+from repro.api.session import (  # noqa: F401
+    RESULT_SCHEMA_VERSION, RunResult, Session, build, git_sha, run_grid,
+    spec_grid, sweep_config_for_specs,
+)
+from repro.core.protocol import register_first_layer  # noqa: F401
+from repro.data.registry import (  # noqa: F401
+    DatasetEntry, dataset_names, get_dataset, register_dataset,
+)
+
+
+def first_layer_names() -> list:
+    """Registered first-layer backend names."""
+    from repro.core.protocol import FIRST_LAYERS
+    return FIRST_LAYERS.names()

@@ -1,0 +1,463 @@
+"""``build(spec) -> Session`` -- the runnable side of the front door.
+
+A Session wraps one mode implementation (resolved from the mode
+registry) behind a uniform surface:
+
+  session.run()      train, return a versioned :class:`RunResult`
+  session.predict()  class predictions from the trained params
+  session.resume()   continue from the latest checkpoint in
+                     ``spec.checkpoint_dir`` (``latest_step``)
+
+Parity contract (tests/test_api.py pins all of it bit-for-bit):
+
+  * a single-seed federated Session reproduces
+    ``DeVertiFL(ProtocolConfig(...)).train()`` exactly -- same key
+    derivation (``train_keys`` / per-round ``fold_in``), same jitted
+    round function, same history entries -- in every mode, every
+    first-layer lane, padded or not;
+  * a multi-seed Session reproduces ``sweep.run_cell``;
+  * ``run_grid`` over a spec grid reproduces ``sweep.run_grid`` over
+    the equivalent SweepConfig (plus a per-cell ``spec_hash``);
+  * a ``resume()`` after a checkpoint matches the uninterrupted run
+    (round r depends only on carried state and ``fold_in(loop_key, r)``).
+
+``RunResult`` is the record the bench JSON schema reuses: metrics,
+per-round trajectory, spec hash, git SHA, timings, and a
+``schema_version`` so downstream tooling can detect shape changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import time
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.modes import get_mode
+from repro.api.spec import ExperimentSpec
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core import sweep as SW
+from repro.core.baselines import SplitNN, SplitNNConfig
+from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
+
+RESULT_SCHEMA_VERSION = 1
+_CKPT_NAME = "session"
+
+
+def _hash_array(hex_hash: str) -> np.ndarray:
+    """16-hex-char hash -> uint8[8], checkpointable alongside params."""
+    return np.frombuffer(bytes.fromhex(hex_hash), np.uint8)
+
+
+@lru_cache(maxsize=1)
+def git_sha() -> str:
+    """`git describe --always --dirty` of this checkout ("unknown"
+    outside a repo; cached -- constant per process).  Stamped into
+    RunResult and the bench entries."""
+    try:
+        return subprocess.check_output(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+@dataclass
+class RunResult:
+    """Versioned result record.  ``params`` (the trained per-client
+    param stack, or SplitNN param dict) is carried for programmatic
+    use but excluded from ``to_dict()`` so results serialize small."""
+    spec: ExperimentSpec
+    spec_hash: str
+    git_sha: str
+    metrics: dict                   # final metrics ("f1", "acc", ...)
+    history: List[dict] = field(default_factory=list)
+    timings: dict = field(default_factory=dict)
+    params: Any = None
+    resumed_from: Optional[int] = None
+    schema_version: int = RESULT_SCHEMA_VERSION
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict (the bench schema embeds this shape)."""
+        def clean(v):
+            if isinstance(v, dict):
+                return {k: clean(x) for k, x in v.items()}
+            if isinstance(v, (list, tuple)):
+                return [clean(x) for x in v]
+            if isinstance(v, (np.ndarray, jnp.ndarray)):
+                return np.asarray(v).tolist()
+            if isinstance(v, (np.floating, np.integer)):
+                return v.item()
+            return v
+        return {
+            "schema_version": self.schema_version,
+            "spec": self.spec.to_dict(),
+            "spec_hash": self.spec_hash,
+            "git_sha": self.git_sha,
+            "metrics": clean(self.metrics),
+            "history": clean(self.history),
+            "timings": clean(self.timings),
+            "resumed_from": self.resumed_from,
+        }
+
+
+def _protocol_config(spec: ExperimentSpec, internal: str) -> ProtocolConfig:
+    """The thin internal config a spec lowers to (field-for-field; the
+    spec's extra knobs -- eval cadence, checkpointing, shard -- live at
+    the Session layer)."""
+    return ProtocolConfig(
+        dataset=spec.dataset, n_clients=spec.n_clients,
+        rounds=spec.rounds, epochs=spec.epochs,
+        batch_size=spec.batch_size, lr=spec.lr,
+        exchange_at=spec.exchange_at, mode=internal, fedavg=spec.fedavg,
+        seed=spec.seed, n_samples=spec.n_samples, engine=spec.engine,
+        first_layer=spec.first_layer, max_clients=spec.max_clients)
+
+
+def _sweep_config(spec: ExperimentSpec, client_counts) -> SW.SweepConfig:
+    return SW.SweepConfig(
+        client_counts=tuple(client_counts), seeds=spec.seeds,
+        rounds=spec.rounds, epochs=spec.epochs,
+        batch_size=spec.batch_size, lr=spec.lr,
+        exchange_at=spec.exchange_at, fedavg=spec.fedavg,
+        n_samples=spec.n_samples, first_layer=spec.first_layer)
+
+
+class Session:
+    """One runnable experiment.  Construct via :func:`build`."""
+
+    def __init__(self, spec: ExperimentSpec):
+        if not isinstance(spec, ExperimentSpec):
+            raise TypeError(f"build() takes an ExperimentSpec, got "
+                            f"{type(spec).__name__}")
+        self.spec = spec
+        self.mode = get_mode(spec.mode)
+        self._fed = None
+        self._runner = None
+        self._last_params = None
+
+    # ------------------------------------------------------------------
+    @property
+    def federation(self) -> DeVertiFL:
+        """The underlying DeVertiFL engine (federated modes only) --
+        built lazily, shared by run/resume/predict."""
+        if self.mode.kind != "federated":
+            raise ValueError(f"mode {self.spec.mode!r} has no DeVertiFL "
+                             "federation (it is not a federated mode)")
+        if self._fed is None:
+            self._fed = DeVertiFL(
+                _protocol_config(self.spec, self.mode.internal))
+        return self._fed
+
+    def _result(self, metrics, history, params, timings,
+                resumed_from=None) -> RunResult:
+        self._last_params = params
+        return RunResult(spec=self.spec, spec_hash=self.spec.spec_hash,
+                         git_sha=git_sha(), metrics=metrics,
+                         history=history, timings=timings, params=params,
+                         resumed_from=resumed_from)
+
+    # ------------------------------------------------------------------
+    def run(self, key=None) -> RunResult:
+        """Train from scratch.  ``key`` overrides the spec-seed-derived
+        PRNGKey (single-seed federated sessions only) -- an escape
+        hatch for driving the engine on an external key stream.  NOTE
+        the RunResult still carries the spec's hash (which identifies
+        the spec-derived experiment), so key= is refused whenever
+        checkpointing is on: a checkpoint of a custom-key run would
+        pass the resume_hash guard and resume() on the wrong stream."""
+        spec = self.spec
+        if key is not None and (self.mode.kind != "federated"
+                                or len(spec.seeds) > 1):
+            raise ValueError(
+                "key= applies to single-seed federated sessions; other "
+                "modes and multi-seed cells derive keys from the spec "
+                "seeds")
+        if key is not None and spec.checkpoint_every:
+            raise ValueError(
+                "key= cannot be combined with checkpointing: the "
+                "custom key is not recorded, so resume() would "
+                "continue the run on the spec-seed key stream instead "
+                "-- a silent hybrid trajectory")
+        if self.mode.kind == "custom":
+            runner = self.mode.runner(spec)
+            self._runner = runner
+            return self._result(*runner.run())
+        if self.mode.kind == "splitnn":
+            return self._run_splitnn()
+        if len(spec.seeds) > 1:
+            return self._run_cell()
+        return self._run_federated(key=key)
+
+    def resume(self) -> RunResult:
+        """Continue from the latest checkpoint in
+        ``spec.checkpoint_dir`` (a fresh ``run()`` if none exists).
+        Rounds after the checkpoint are bit-for-bit the uninterrupted
+        run's -- round r consumes only the carried state and
+        ``fold_in(loop_key, r)``."""
+        spec = self.spec
+        if not spec.checkpoint_dir:
+            raise ValueError("resume() needs spec.checkpoint_dir")
+        if self.mode.kind != "federated" or len(spec.seeds) > 1:
+            raise ValueError("resume() supports single-seed federated "
+                             "sessions")
+        step = latest_step(spec.checkpoint_dir, name=_CKPT_NAME)
+        if step is None:
+            return self.run()
+        if step > spec.rounds:
+            raise ValueError(
+                f"latest checkpoint in {spec.checkpoint_dir!r} is at "
+                f"round {step}, beyond spec.rounds={spec.rounds}: "
+                "resuming would return a longer run's params under "
+                "this spec's hash; raise rounds or point at a "
+                "different checkpoint_dir")
+        fed = self.federation
+        init_key, _ = train_keys(jax.random.PRNGKey(spec.seed))
+        params_like = fed.init_params(init_key)
+        like = {"params": params_like,
+                "opt_state": jax.vmap(fed.opt.init)(params_like),
+                "step_idx": jnp.zeros((), jnp.int32),
+                "resume_hash": _hash_array(spec.resume_hash)}
+        state = load_checkpoint(spec.checkpoint_dir, step, like,
+                                name=_CKPT_NAME)
+        if not np.array_equal(state["resume_hash"],
+                              _hash_array(spec.resume_hash)):
+            raise ValueError(
+                f"checkpoint in {spec.checkpoint_dir!r} belongs to a "
+                "different experiment (resume_hash mismatch): resuming "
+                "it under this spec would splice another run's params "
+                "into this spec's RunResult")
+        state = jax.tree.map(jnp.asarray,
+                             {k: v for k, v in state.items()
+                              if k != "resume_hash"})
+        return self._run_federated(
+            start_round=step,
+            state=(state["params"], state["opt_state"],
+                   state["step_idx"]),
+            resumed_from=step)
+
+    def predict(self, x, params=None):
+        """Class predictions on raw (original-column-order) inputs.
+        Federated modes return the LIVE per-client [n_clients, B]
+        stack (dead padded slots are trimmed -- their rows would be
+        garbage); splitnn returns [B].  ``params`` defaults to the
+        last run's."""
+        params = params if params is not None else self._last_params
+        if params is None:
+            if len(self.spec.seeds) > 1:
+                raise ValueError(
+                    "multi-seed cells do not retain per-seed params; "
+                    "run a single-seed session (seeds=(s,)) for "
+                    "predict(), or pass params= explicitly")
+            raise ValueError("predict() before run()/resume(): pass "
+                             "params= or train first")
+        if self.mode.kind == "federated":
+            return self.federation.predict(params, x)[:self.spec.n_clients]
+        if self.mode.kind == "splitnn":
+            return self._splitnn().predict(params, x)
+        if self._runner is None:    # predict with explicit params=
+            self._runner = self.mode.runner(self.spec)
+        return self._runner.predict(params, x)
+
+    # ------------------------------------------------------------------
+    def _run_federated(self, key=None, start_round=0, state=None,
+                       resumed_from=None) -> RunResult:
+        spec = self.spec
+        fed = self.federation
+        key = key if key is not None else jax.random.PRNGKey(spec.seed)
+        init_key, loop_key = train_keys(key)
+        if state is None:
+            params = fed.init_params(init_key)
+            opt_state = jax.vmap(fed.opt.init)(params)
+            step_idx = jnp.zeros((), jnp.int32)
+        else:
+            params, opt_state, step_idx = state
+        history = []
+        t0 = time.perf_counter()
+        for r in range(start_round, spec.rounds):
+            rkey = jax.random.fold_in(loop_key, r)
+            if spec.engine == "scan":
+                params, opt_state, step_idx, losses = fed._round(
+                    params, opt_state, step_idx, rkey,
+                    fed._xtr, fed._ytr, fed._lay)
+            else:
+                params, opt_state, step_idx, losses = fed._python_round(
+                    params, opt_state, step_idx, rkey)
+            if spec.eval_every and (r + 1) % spec.eval_every == 0:
+                ev = fed.evaluate(params)
+                ev["round"] = r
+                ev["loss"] = float(losses[-1])
+                ev["round_losses"] = np.asarray(losses)
+                history.append(ev)
+            if spec.checkpoint_every and \
+                    (r + 1) % spec.checkpoint_every == 0:
+                save_checkpoint(
+                    spec.checkpoint_dir, r + 1,
+                    {"params": params, "opt_state": opt_state,
+                     "step_idx": step_idx,
+                     "resume_hash": _hash_array(spec.resume_hash)},
+                    name=_CKPT_NAME)
+        jax.block_until_ready(params)
+        wall = time.perf_counter() - t0
+        final = fed.evaluate(params)
+        rounds_run = spec.rounds - start_round
+        steps = rounds_run * spec.epochs * fed.n_batches
+        timings = {"wall_s": wall,
+                   "steps_per_sec": steps / max(wall, 1e-9)}
+        return self._result(final, history, params, timings,
+                            resumed_from=resumed_from)
+
+    def _run_cell(self) -> RunResult:
+        spec = self.spec
+        cell = SW.run_cell(spec.dataset, self.mode.internal,
+                           spec.n_clients,
+                           _sweep_config(spec, (spec.n_clients,)))
+        metrics = {"f1": cell["f1_mean"], "acc": cell["acc_mean"],
+                   "f1_std": cell["f1_std"],
+                   "f1_per_seed": cell["f1_per_seed"],
+                   "acc_per_seed": cell["acc_per_seed"],
+                   "final_loss_mean": cell["final_loss_mean"],
+                   "seeds": cell["seeds"]}
+        timings = {"wall_s": cell["wall_s"],
+                   "steps_per_sec": cell["steps_per_sec"]}
+        return self._result(metrics, [], None, timings)
+
+    def _splitnn_config(self, seed) -> SplitNNConfig:
+        spec = self.spec
+        return SplitNNConfig(
+            dataset=spec.dataset, n_clients=spec.n_clients,
+            rounds=spec.rounds, epochs=spec.epochs,
+            batch_size=spec.batch_size, lr=spec.lr, seed=seed,
+            n_samples=spec.n_samples)
+
+    def _splitnn(self) -> SplitNN:
+        if self._runner is None:
+            self._runner = SplitNN(self._splitnn_config(self.spec.seed))
+        return self._runner
+
+    def _run_splitnn(self) -> RunResult:
+        spec = self.spec
+        t0 = time.perf_counter()
+        if len(spec.seeds) == 1:
+            metrics, params = self._splitnn().train(return_state=True)
+        else:
+            # params stay None: like federated cells, a multi-seed run
+            # keeps no single model for predict() to silently pick
+            params = None
+            f1s, accs = [], []
+            for s in spec.seeds:
+                m = SplitNN(self._splitnn_config(s)).train()
+                f1s.append(m["f1"]), accs.append(m["acc"])
+            metrics = {"f1": float(np.mean(f1s)),
+                       "acc": float(np.mean(accs)),
+                       "f1_std": float(np.std(f1s)),
+                       "f1_per_seed": f1s, "acc_per_seed": accs,
+                       "seeds": list(spec.seeds)}
+        wall = time.perf_counter() - t0
+        return self._result(metrics, [], params, {"wall_s": wall})
+
+
+def build(spec: ExperimentSpec) -> Session:
+    """The front door: one validated spec -> one runnable Session."""
+    return Session(spec)
+
+
+# ---------------------------------------------------------------------------
+# spec grids
+# ---------------------------------------------------------------------------
+# grid cells must agree on everything but (dataset, mode, n_clients):
+# they share one compiled round function per (dataset, mode) group
+_GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
+                "exchange_at", "fedavg", "engine", "first_layer",
+                "n_samples", "shard")
+
+
+def spec_grid(datasets=("mnist", "fmnist", "titanic", "bank"),
+              modes=("devertifl", "non_federated", "verticomb"),
+              client_counts=(2, 3, 5), seeds=(0, 1, 2), **common):
+    """The cartesian datasets x modes x client_counts spec grid (the
+    axes the paper's Table 2 varies).  ``common`` forwards to every
+    ExperimentSpec (rounds=, epochs=, first_layer=, ...)."""
+    return tuple(
+        ExperimentSpec(dataset=ds, mode=mode, n_clients=nc, seeds=seeds,
+                       **common)
+        for ds in datasets for mode in modes for nc in client_counts)
+
+
+def _grid_groups(specs):
+    """Group a spec sequence by (dataset, mode) preserving order, after
+    validating grid homogeneity.  Returns [((ds, entry), [spec, ...])]."""
+    specs = list(specs)
+    if not specs:
+        raise ValueError("empty spec grid")
+    for s in specs:
+        if not isinstance(s, ExperimentSpec):
+            raise TypeError(f"spec grids hold ExperimentSpec items, got "
+                            f"{type(s).__name__}")
+        for f in _GRID_COMMON:
+            if getattr(s, f) != getattr(specs[0], f):
+                raise ValueError(
+                    f"grid specs must agree on {f!r} (they share one "
+                    f"compiled round per dataset x mode): "
+                    f"{getattr(s, f)!r} != {getattr(specs[0], f)!r}")
+        if s.engine != "scan":
+            raise ValueError("grids run on the vmapped sweep engine "
+                             "(engine='scan')")
+        if s.max_clients is not None:
+            raise ValueError("grids pad the client axis automatically; "
+                             "leave max_clients=None")
+        if get_mode(s.mode).kind != "federated":
+            raise ValueError(f"mode {s.mode!r} is not a federated mode; "
+                             "grids run federated cells (run splitnn "
+                             "rows as standalone sessions)")
+    groups = {}
+    for s in specs:
+        gk = (s.dataset, s.mode)
+        g = groups.setdefault(gk, [])
+        if any(p.n_clients == s.n_clients for p in g):
+            raise ValueError(f"duplicate grid cell {s.dataset}/{s.mode}/"
+                             f"{s.n_clients}")
+        g.append(s)
+    return list(groups.items())
+
+
+def sweep_config_for_specs(specs):
+    """One (dataset, mode) spec group -> (dataset, internal_mode,
+    SweepConfig) for ``sweep.run_padded_cells``."""
+    groups = _grid_groups(specs)
+    if len(groups) != 1:
+        raise ValueError(
+            f"expected one (dataset, mode) group, got "
+            f"{[f'{ds}/{m}' for (ds, m), _ in groups]}; use "
+            "repro.api.run_grid for multi-group spec grids")
+    (ds, mode), group = groups[0]
+    counts = tuple(s.n_clients for s in group)
+    return ds, get_mode(mode).internal, _sweep_config(group[0], counts)
+
+
+def run_grid(specs, shard=None):
+    """Run a spec grid: one padded, sharded lane batch per (dataset,
+    mode) group -- exactly ``sweep.run_grid``'s execution and schema
+    ({"cells": {"ds/mode/n": cell}, "compare": ...}), with each cell
+    additionally stamped with the ``spec_hash`` of the spec that
+    produced it.  ``shard`` overrides the specs' shard policy."""
+    cells, compare = {}, {}
+    for (ds, mode), group in _grid_groups(specs):
+        counts = tuple(s.n_clients for s in group)
+        out = SW.run_padded_cells(
+            ds, get_mode(mode).internal, _sweep_config(group[0], counts),
+            shard=group[0].shard if shard is None else shard)
+        for s in group:
+            cell = out["cells"][s.n_clients]
+            cell["spec_hash"] = s.spec_hash
+            cells[f"{ds}/{mode}/{s.n_clients}"] = cell
+            compare.setdefault(f"{ds}/{s.n_clients}", {})[mode] = \
+                cell["f1_mean"]
+    return {"cells": cells, "compare": compare}

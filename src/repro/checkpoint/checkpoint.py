@@ -3,11 +3,13 @@
 Flattens any pytree of arrays to key->array pairs using '/'-joined tree
 paths, saves atomically (tmp + rename), and restores into the same
 structure. Works for params, optimizer state, and De-VertiFL per-client
-model sets alike.
+model sets alike -- including padded client axes (dead slots round-trip
+unchanged, empty arrays included) and NamedTuple nodes like
+``LayoutArrays`` (attribute path keys), which the old '/'-join crashed
+on (``GetAttrKey`` has neither ``.key`` nor ``.idx``).
 """
 from __future__ import annotations
 
-import json
 import os
 import re
 import tempfile
@@ -16,11 +18,27 @@ import jax
 import numpy as np
 
 
+def _key_part(p) -> str:
+    """One path entry -> its string key.  Covers every jax key type:
+    DictKey/FlattenedIndexKey (.key), GetAttrKey (.name, NamedTuples
+    and dataclass-like nodes), SequenceKey (.idx)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flat_with_paths(tree):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        yield "/".join(_key_part(p) for p in path), leaf
+
+
 def _flatten(tree):
     flat = {}
-    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+    for key, leaf in _flat_with_paths(tree):
+        if key in flat:
+            raise ValueError(f"duplicate flattened key {key!r}; tree "
+                             "paths must be unique after '/'-joining")
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -47,16 +65,25 @@ def latest_step(directory, name="state"):
 
 
 def load_checkpoint(directory, step, like_tree, name="state"):
-    """Restore into the structure of like_tree (values replaced)."""
+    """Restore into the structure of like_tree (values replaced; leaves
+    are cast to the like leaf's dtype, a no-op for same-dtype
+    round-trips)."""
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
     data = np.load(path)
-    paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    treedef = jax.tree_util.tree_structure(like_tree)
     leaves = []
-    for path_keys, leaf in paths:
-        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
-                       for p in path_keys)
+    for key, leaf in _flat_with_paths(like_tree):
+        if key not in data:
+            raise ValueError(
+                f"checkpoint {path} has no entry {key!r}; the like_tree "
+                "structure does not match the saved tree "
+                f"(saved keys: {sorted(data.files)[:8]}...)")
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), \
-            f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}"
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key!r}: checkpoint has "
+                f"{arr.shape}, like_tree expects {tuple(leaf.shape)} "
+                "(padded client axes must be restored into a like_tree "
+                "of the same padded width)")
         leaves.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import partition as PT
-from repro.data import synthetic as SD
+from repro.data import registry as DR
 from repro.metrics import accuracy, f1_score
 from repro.models import layers as L
 from repro.optim import adam
@@ -40,15 +40,16 @@ class SplitNNConfig:
 class SplitNN:
     def __init__(self, cfg: SplitNNConfig):
         self.cfg = cfg
-        xtr, ytr, xte, yte = SD.make_dataset(cfg.dataset, cfg.n_samples,
+        xtr, ytr, xte, yte = DR.make_dataset(cfg.dataset, cfg.n_samples,
                                              seed=cfg.seed)
         self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
         self.n_features = xtr.shape[1]
-        self.n_classes = SD.N_CLASSES[cfg.dataset]
+        self.n_classes = DR.get_dataset(cfg.dataset).n_classes
         self.partition = PT.make_partition(cfg.dataset, self.n_features,
                                            cfg.n_clients, seed=cfg.seed)
         self.opt = adam(cfg.lr, max_grad_norm=None)
         self._step = jax.jit(self._make_step(), donate_argnums=(0, 1))
+        self._jit_forward = jax.jit(self._forward)
 
     def init_params(self, key):
         cfg = self.cfg
@@ -86,7 +87,15 @@ class SplitNN:
             return params, opt_state, loss
         return step
 
-    def train(self, key=None):
+    def predict(self, params, x):
+        """[B] class predictions from the server-side forward."""
+        logits = self._jit_forward(params, jnp.asarray(x))
+        return np.asarray(jnp.argmax(logits, -1))
+
+    def train(self, key=None, return_state=False):
+        """Train; returns {"f1", "acc"}.  With return_state=True the
+        tuple (metrics, params) instead -- repro.api's splitnn Session
+        keeps the params for predict()."""
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(cfg.seed)
         params = self.init_params(key)
@@ -105,8 +114,8 @@ class SplitNN:
                     params, opt_state, loss = self._step(
                         params, opt_state, xtr[sl], ytr[sl], i)
                     i = i + 1
-        preds = np.asarray(jnp.argmax(
-            jax.jit(self._forward)(params, jnp.asarray(self.xte)), -1))
+        preds = self.predict(params, self.xte)
         avg = "macro" if self.n_classes > 2 else "binary"
-        return {"f1": f1_score(self.yte, preds, average=avg),
-                "acc": accuracy(self.yte, preds)}
+        metrics = {"f1": f1_score(self.yte, preds, average=avg),
+                   "acc": accuracy(self.yte, preds)}
+        return (metrics, params) if return_state else metrics

@@ -51,15 +51,26 @@ from typing import NamedTuple, Sequence, Tuple
 
 import numpy as np
 
+from repro.data import registry as DR
 from repro.data import vertical as V
 
 
 def make_partition(dataset: str, n_features: int, n_clients: int, seed=0):
-    """Returns list of per-client sorted feature-index arrays."""
-    if dataset in ("mnist", "fmnist"):
+    """Returns list of per-client sorted feature-index arrays.
+
+    The partition strategy comes from the dataset registry entry
+    (``repro.data.registry``): "image_rows" deals whole image rows
+    round-robin (Fig. 2), "random" assigns features randomly
+    (Titanic), "round_robin" interleaves feature columns, and a
+    callable entry is invoked as ``(n_features, n_clients, seed)``.
+    Unknown dataset names raise with the registered options."""
+    kind = DR.get_dataset(dataset).partition
+    if callable(kind):
+        return kind(n_features, n_clients, seed)
+    if kind == "image_rows":
         side = int(round(n_features ** 0.5))
         return V.round_robin_rows(n_clients, side)
-    if dataset == "titanic":
+    if kind == "random":
         return V.random_features(n_features, n_clients, seed)
     return V.round_robin_features(n_features, n_clients)
 

@@ -87,11 +87,12 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import partition as PT
 from repro.core.exchange import fedavg, hidden_output_exchange
-from repro.data import synthetic as SD
+from repro.data import registry as DR
 from repro.kernels.vfl_matmul import vfl_matmul
 from repro.metrics import accuracy, f1_score
 from repro.models.mlp_model import PaperMLP
 from repro.optim import adam
+from repro.registry import Registry
 
 
 @dataclass
@@ -128,20 +129,56 @@ class ProtocolConfig:
         return self.max_clients or self.n_clients
 
 
+# legacy name->arch map, kept importable; the engine resolves arch via
+# the dataset registry so registered custom datasets work everywhere
 ARCH_FOR = {"mnist": "paper-mlp-mnist", "fmnist": "paper-mlp-fmnist",
             "titanic": "paper-mlp-titanic", "bank": "paper-mlp-bank"}
+
+
+def arch_for(dataset: str) -> str:
+    """Model-config name for a dataset, via the dataset registry."""
+    return DR.get_dataset(dataset).arch
+
+
+# First-layer backend registry: the three built-in lanes plus "auto"
+# hold None (they are implemented inline below); a registered custom
+# backend holds a factory ``make(model, pcfg, layout) -> first_fn``
+# where ``first_fn(params, xb, lay) -> [n_clients, B, H]`` post-ReLU
+# layer-0 activations (the make_first_layer_fn contract).
+FIRST_LAYERS = Registry("first_layer")
+for _name in ("auto", "masked", "slice", "pallas"):
+    FIRST_LAYERS.register(_name, None)
+
+
+def register_first_layer(name, make):
+    """Register a custom first-layer backend for ProtocolConfig /
+    ExperimentSpec ``first_layer=name``.  Not supported under the
+    padded multi-count sweep vmap (same constraint as pallas)."""
+    return FIRST_LAYERS.register(name, make)
+
+
+def auto_first_layer() -> str:
+    """What first_layer="auto" means on this backend.  THE single
+    definition of the auto rule -- repro.api.ExperimentSpec
+    canonicalizes "auto" through it at construction so a spec (and its
+    spec_hash) records the lane that actually runs."""
+    return "pallas" if jax.default_backend() == "tpu" else "slice"
 
 
 def resolve_first_layer(pcfg) -> str:
     """Map the first_layer knob to a concrete path for this backend."""
     fl = pcfg.first_layer
+    maker = FIRST_LAYERS.get(fl)    # unknown names raise with options
     if fl == "auto":
-        fl = "pallas" if jax.default_backend() == "tpu" else "slice"
-    if fl not in ("masked", "slice", "pallas"):
-        raise ValueError(f"unknown first_layer {pcfg.first_layer!r}")
+        fl = auto_first_layer()
     if pcfg.exchange_at == 0 and fl != "masked":
         # exchanging the raw zero-padded input predates layer 0; only
         # the masked formulation expresses it
+        if maker is not None:
+            raise ValueError(
+                f"first_layer {fl!r} cannot express exchange_at=0 "
+                "(the exchange predates layer 0); use "
+                "first_layer='masked'")
         fl = "masked"
     return fl
 
@@ -212,8 +249,11 @@ def make_first_layer_fn(model, pcfg, layout, interpret=None):
     # the masked reference keeps its whole-forward formulation inline in
     # make_step_fn / make_predict_fn; only the slice-aware paths split
     # the first layer out
-    assert fl in ("slice", "pallas"), fl
+    assert fl != "masked", fl
     assert layout is not None, f"first_layer={fl!r} needs a Layout"
+    maker = FIRST_LAYERS.get(fl)
+    if maker is not None:           # registered custom backend
+        return maker(model, pcfg, layout)
     sizes = layout.sizes
 
     # Dead (padded) clients own an empty feature slice: their layer-0
@@ -575,9 +615,9 @@ class DeVertiFL:
     def __init__(self, pcfg: ProtocolConfig, fedavg_fn=None):
         self.pcfg = pcfg
         self._fedavg_fn = fedavg_fn
-        self.mcfg = get_config(ARCH_FOR[pcfg.dataset])
+        self.mcfg = get_config(arch_for(pcfg.dataset))
         self.model = PaperMLP(self.mcfg)
-        xtr, ytr, xte, yte = SD.make_dataset(pcfg.dataset, pcfg.n_samples,
+        xtr, ytr, xte, yte = DR.make_dataset(pcfg.dataset, pcfg.n_samples,
                                              seed=pcfg.seed)
         self.xtr, self.ytr, self.xte, self.yte = xtr, ytr, xte, yte
         self.n_features = self.model.in_features
@@ -697,6 +737,28 @@ class DeVertiFL:
 
 
 def train_federation(**kw):
-    """Convenience: train_federation(dataset='mnist', n_clients=5, ...)"""
-    pcfg = ProtocolConfig(**kw)
-    return DeVertiFL(pcfg).train()
+    """DEPRECATED legacy front door, kept as a shim over ``repro.api``.
+
+    Translates ProtocolConfig-style kwargs (``seed=`` becomes the
+    spec's ``seeds=(seed,)``) into an ``ExperimentSpec``, runs it
+    through ``build(spec).run()``, and returns the historical
+    ``{"history", "final", "params"}`` dict -- bit-for-bit what
+    ``DeVertiFL(ProtocolConfig(**kw)).train()`` returned
+    (tests/test_api.py pins this).  New code should construct the spec
+    directly::
+
+        from repro.api import ExperimentSpec, build
+        result = build(ExperimentSpec(dataset="mnist", n_clients=5)).run()
+    """
+    import warnings
+    warnings.warn(
+        "train_federation(**kw) is deprecated; build an "
+        "repro.api.ExperimentSpec and run it via repro.api.build(spec)"
+        ".run() instead", DeprecationWarning, stacklevel=2)
+    from repro.api import ExperimentSpec, build   # lazy: api sits above core
+    kw = dict(kw)
+    if "seed" in kw:
+        kw["seeds"] = (kw.pop("seed"),)
+    rr = build(ExperimentSpec(**kw)).run()
+    return {"history": rr.history, "final": rr.metrics,
+            "params": rr.params}

@@ -71,11 +71,11 @@ from repro import sharding as sh
 from repro.compat import shard_map
 from repro.configs import get_config
 from repro.core import partition as PT
-from repro.core.protocol import (ARCH_FOR, ProtocolConfig,
+from repro.core.protocol import (FIRST_LAYERS, ProtocolConfig, arch_for,
                                  init_padded_params, make_perm_fn,
                                  make_predict_fn, make_round_fn,
                                  resolve_first_layer, train_keys)
-from repro.data import synthetic as SD
+from repro.data import registry as DR
 from repro.metrics import accuracy, f1_score
 from repro.models.mlp_model import PaperMLP
 from repro.optim import adam
@@ -132,8 +132,16 @@ def make_uniform_first_layer_fn(width: int):
 def _sweep_first_layer(pcfg, width):
     """Resolve the first layer for a lane-vmapped sweep: masked stays
     masked (fully traced already); slice/pallas/auto take the uniform
-    gather-slice (static pallas offsets cannot vary across lanes)."""
-    if resolve_first_layer(pcfg) == "masked":
+    gather-slice (static pallas offsets cannot vary across lanes).
+    Registered custom backends close over per-federation statics the
+    lane vmap cannot vary, so they are refused here, not mis-traced."""
+    fl = resolve_first_layer(pcfg)
+    if FIRST_LAYERS.get(fl) is not None:
+        raise ValueError(
+            f"custom first_layer {fl!r} is not supported in padded "
+            "multi-count sweeps (its offsets/sizes cannot vary per "
+            "lane); use 'masked', 'slice', 'pallas', or 'auto'")
+    if fl == "masked":
         return None
     return make_uniform_first_layer_fn(width)
 
@@ -146,7 +154,7 @@ def _stacked_federations(dataset, n_clients, seeds, n_samples):
     Data is permuted into each seed's canonical column order; the
     LayoutArrays (masks/offsets/sizes/client_mask) carry the per-seed
     layout through the vmapped round."""
-    xtr, ytr, xte, yte = SD.make_dataset_stack(dataset, seeds, n=n_samples)
+    xtr, ytr, xte, yte = DR.make_dataset_stack(dataset, seeds, n=n_samples)
     layouts = [PT.make_layout(dataset, xtr.shape[-1], n_clients, seed=s)
                for s in seeds]
     # canonical offsets/sizes are seed-independent (only the column
@@ -172,7 +180,7 @@ def _stacked_lanes(dataset, client_counts, seeds, n_samples):
     lanes, width): lanes is the [(n_clients, seed), ...] order
     (count-major), width the max live slice length."""
     max_c = max(client_counts)
-    xtr, ytr, xte, yte = SD.make_dataset_stack(dataset, seeds, n=n_samples)
+    xtr, ytr, xte, yte = DR.make_dataset_stack(dataset, seeds, n=n_samples)
     xs_tr, xs_te, lays, lanes, width = [], [], [], [], 1
     for nc in client_counts:
         for si, s in enumerate(seeds):
@@ -246,7 +254,7 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
         n_samples=scfg.n_samples, first_layer=scfg.first_layer)
-    model = PaperMLP(get_config(ARCH_FOR[dataset]))
+    model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
     xtr, ytr, xte, yte, lay, keys, layout = _stacked_federations(
@@ -307,10 +315,33 @@ def _lane_shards(n_lanes: int, shard) -> int:
     return max(d for d in range(1, avail + 1) if n_lanes % d == 0)
 
 
-def run_padded_cells(dataset, mode, scfg: SweepConfig, shard="auto"):
+def _coerce_sweep_config(dataset, mode, scfg):
+    """Let run_padded_cells take a spec grid in place of a SweepConfig:
+    a sequence of ``repro.api.ExperimentSpec`` (one per client count,
+    same dataset/mode) is translated via the api layer.  Returns the
+    (dataset, internal_mode, SweepConfig) triple."""
+    if isinstance(scfg, SweepConfig):
+        return dataset, mode, scfg
+    from repro.api.modes import get_mode        # lazy: api > core
+    from repro.api.session import sweep_config_for_specs
+    ds, internal, cfg = sweep_config_for_specs(scfg)
+    if dataset is not None and dataset != ds:
+        raise ValueError(f"dataset argument {dataset!r} does not match "
+                         f"the specs' dataset {ds!r}")
+    # resolve the caller's mode through the registry so aliases
+    # (backward_exchange == verticomb) compare equal
+    if mode is not None and get_mode(mode).internal != internal:
+        raise ValueError(f"mode argument {mode!r} does not match the "
+                         f"specs' mode {internal!r}")
+    return ds, internal, cfg
+
+
+def run_padded_cells(dataset, mode, scfg, shard="auto"):
     """Train the FULL client_counts x seeds lane batch of one
     (dataset, mode) pair under a single compiled round function,
-    distributing lanes over the device mesh.
+    distributing lanes over the device mesh.  ``scfg`` is a
+    SweepConfig, or a sequence of ``repro.api.ExperimentSpec`` sharing
+    one (dataset, mode) whose n_clients values form the count axis.
 
     Returns {"cells": {n_clients: cell_dict}, "round_traces": int,
     "lanes": int, "devices": int, "wall_s": float, "cells_per_sec":
@@ -322,6 +353,7 @@ def run_padded_cells(dataset, mode, scfg: SweepConfig, shard="auto"):
     one compile (pinned in tests).
     shard: "auto" (largest dividing device count) | False | int.
     """
+    dataset, mode, scfg = _coerce_sweep_config(dataset, mode, scfg)
     counts = tuple(scfg.client_counts)
     max_c = max(counts)
     # n_clients=min(counts) keeps ProtocolConfig's padded/unpadded
@@ -334,7 +366,7 @@ def run_padded_cells(dataset, mode, scfg: SweepConfig, shard="auto"):
         batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
         n_samples=scfg.n_samples, first_layer=scfg.first_layer)
-    model = PaperMLP(get_config(ARCH_FOR[dataset]))
+    model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
     xtr, ytr, xte, yte, lay, keys, lanes, width = _stacked_lanes(
@@ -417,12 +449,23 @@ def run_padded_cells(dataset, mode, scfg: SweepConfig, shard="auto"):
             "steps_per_sec": steps * n_lanes / max(wall, 1e-9)}
 
 
-def run_grid(scfg: SweepConfig = SweepConfig(), shard="auto"):
+def run_grid(scfg: SweepConfig = SweepConfig(), shard=None):
     """Walk the full datasets x modes x client_counts grid -- one
     padded lane batch (ONE round compile, lanes sharded over devices)
     per (dataset, mode).  Returns {"cells": {key: cell}, "compare":
     {ds/n: {mode: f1_mean}}} where key = "dataset/mode/n_clients",
-    exactly the pre-padding schema."""
+    exactly the pre-padding schema.
+
+    ``scfg`` may also be a spec grid -- a sequence of
+    ``repro.api.ExperimentSpec`` (e.g. from ``repro.api.spec_grid``)
+    -- in which case the call is routed through ``repro.api.run_grid``
+    (same schema, plus a per-cell ``spec_hash``).  ``shard`` defaults
+    to the specs' shard policy on that route and to "auto" on the
+    SweepConfig route; passing it explicitly overrides both."""
+    if not isinstance(scfg, SweepConfig):
+        from repro.api.session import run_grid as _api_run_grid
+        return _api_run_grid(scfg, shard=shard)
+    shard = "auto" if shard is None else shard
     cells, compare = {}, {}
     for ds, mode in itertools.product(scfg.datasets, scfg.modes):
         out = run_padded_cells(ds, mode, scfg, shard=shard)

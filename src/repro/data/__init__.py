@@ -7,3 +7,6 @@ from repro.data.vertical import (  # noqa: F401
     client_view,
 )
 from repro.data.lm import markov_lm_batches, MarkovLM  # noqa: F401
+from repro.data.registry import (  # noqa: F401
+    DatasetEntry, dataset_names, get_dataset, register_dataset,
+)

@@ -86,6 +86,22 @@ _GENS = {
 N_CLASSES = {"mnist": 10, "fmnist": 10, "titanic": 2, "bank": 2}
 
 
+def split_train_test(x, y, test_frac=0.2):
+    """THE train/test split rule for every dataset (registry-routed
+    custom loaders included): the first ``test_frac`` of the draw is
+    the test set.  Single implementation so the bit-for-bit parity
+    between registry and direct loads cannot drift."""
+    n_test = int(len(x) * test_frac)
+    return x[n_test:], y[n_test:], x[:n_test], y[:n_test]
+
+
+def stack_splits(make_fn, seeds, n=None, test_frac=0.2):
+    """Per-seed ``make_fn(n, seed=s, test_frac=...)`` 4-tuples stacked
+    on a leading seed axis (rectangular), for seed-vmapped sweeps."""
+    splits = [make_fn(n, seed=s, test_frac=test_frac) for s in seeds]
+    return tuple(np.stack(parts) for parts in zip(*splits))
+
+
 def make_dataset(name, n=None, seed=None, test_frac=0.2):
     """Returns (x_train, y_train, x_test, y_test)."""
     kw = {}
@@ -93,9 +109,7 @@ def make_dataset(name, n=None, seed=None, test_frac=0.2):
         kw["n"] = n
     if seed is not None:
         kw["seed"] = seed
-    x, y = _GENS[name](**kw)
-    n_test = int(len(x) * test_frac)
-    return x[n_test:], y[n_test:], x[:n_test], y[:n_test]
+    return split_train_test(*_GENS[name](**kw), test_frac=test_frac)
 
 
 def make_dataset_stack(name, seeds, n=None, test_frac=0.2):
@@ -103,6 +117,6 @@ def make_dataset_stack(name, seeds, n=None, test_frac=0.2):
     seed-vmapped sweeps: (x_train, y_train, x_test, y_test), each
     [n_seeds, ...]. Every seed is an independent draw of the same
     (shape, cardinality) generator, so the stack is rectangular."""
-    splits = [make_dataset(name, n, seed=s, test_frac=test_frac)
-              for s in seeds]
-    return tuple(np.stack(parts) for parts in zip(*splits))
+    def mk(n, seed=None, test_frac=0.2):
+        return make_dataset(name, n, seed=seed, test_frac=test_frac)
+    return stack_splits(mk, seeds, n=n, test_frac=test_frac)
