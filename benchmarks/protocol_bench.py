@@ -20,6 +20,8 @@ trajectory accumulates across PRs instead of being overwritten:
     "engines": {"loop": sps, "masked": sps, "slice": sps,
                 "pallas": sps},
     "slice_speedup_vs_masked": ..., "scan_speedup_vs_loop": ...,
+    "schedules": {sched: {"steps_per_sec": ..., "f1": ...,
+                          "spec_hash": ...}},
     "sweep": {"client_counts": [...], "spec_hashes": {n: ...},
               "n_seeds": ...,
               "looped_cells_per_sec": ..., "padded_cells_per_sec": ...,
@@ -77,19 +79,30 @@ def _append_entry(entry, path):
 
 
 def _bench_engine(fed, run_round, n_steps, iters=3):
+    """run_round(params, opt_state, sched_state) must return
+    (params, opt_state, sched_state, losses)."""
     def fresh():
         ik, _ = train_keys(jax.random.PRNGKey(0))
         p = fed.init_params(ik)
-        return p, jax.vmap(fed.opt.init)(p)
+        return p, jax.vmap(fed.opt.init)(p), fed.init_sched_state()
 
-    p, o = fresh()
-    p, o, _, losses = run_round(p, o)       # warm-up / compile
+    p, o, st = fresh()
+    p, o, st, losses = run_round(p, o, st)      # warm-up / compile
     jax.block_until_ready(losses)
     t0 = time.perf_counter()
     for _ in range(iters):
-        p, o, _, losses = run_round(p, o)
+        p, o, st, losses = run_round(p, o, st)
     jax.block_until_ready(losses)
     return iters * n_steps / (time.perf_counter() - t0)
+
+
+def _scan_round(fed, rkey, si):
+    """Adapter: the jitted scan round as a (p, o, st) -> ... callable."""
+    def run_round(p, o, st):
+        p, o, _, st, losses = fed._round(p, o, si, st, rkey, fed._xtr,
+                                         fed._ytr, fed._lay)
+        return p, o, st, losses
+    return run_round
 
 
 def run(smoke=False, results_path=None, iters=None):
@@ -110,16 +123,36 @@ def run(smoke=False, results_path=None, iters=None):
         spec_hashes[fl] = lane_spec.spec_hash
         fed = build(lane_spec).federation
         n_steps = fed.pcfg.epochs * fed.n_batches
-        engines[fl] = _bench_engine(
-            fed, lambda p, o: fed._round(p, o, si, rkey, fed._xtr,
-                                         fed._ytr, fed._lay),
-            n_steps, iters=iters)
+        engines[fl] = _bench_engine(fed, _scan_round(fed, rkey, si),
+                                    n_steps, iters=iters)
         if fl == "masked":
             spec_hashes["loop"] = lane_spec.replace(
                 engine="python").spec_hash
-            engines["loop"] = _bench_engine(
-                fed, lambda p, o: fed._python_round(p, o, si, rkey),
-                n_steps, iters=iters)
+
+            def loop_round(p, o, st, fed=fed):
+                p, o, _, st, losses = fed._python_round(p, o, si, st,
+                                                        rkey)
+                return p, o, st, losses
+            engines["loop"] = _bench_engine(fed, loop_round, n_steps,
+                                            iters=iters)
+
+    # exchange-schedule lane: scan-round throughput + final F1 per
+    # schedule, each stamped with the exact spec it timed.  "sync" is
+    # the reference row (same engine as the slice lane above), so the
+    # schedule overhead -- ring pushes, double-buffer swaps, the extra
+    # data-copy forward -- is measured against it like-for-like.
+    sched_rounds = 1 if smoke else 2
+    schedules = {}
+    for sname in ("sync", "stale_k:1", "double_buffer", "partial:0.8"):
+        sspec = base_spec.replace(schedule=sname, rounds=sched_rounds)
+        sess = build(sspec)
+        sfed = sess.federation
+        sps = _bench_engine(sfed, _scan_round(sfed, rkey, si),
+                            sfed.pcfg.epochs * sfed.n_batches,
+                            iters=iters)
+        f1 = sess.run().metrics["f1"]
+        schedules[sname] = {"steps_per_sec": sps, "f1": f1,
+                            "spec_hash": sspec.spec_hash}
 
     # the sweep lane's config is DERIVED from its spec grid, so the
     # spec_hashes stamped below can never diverge from what is timed
@@ -201,6 +234,9 @@ def run(smoke=False, results_path=None, iters=None):
         # same first layer on both sides: comparable with PR 1's
         # scan_speedup trajectory entry
         "scan_speedup_vs_loop": engines["masked"] / engines["loop"],
+        # per-schedule scan throughput + final F1 (spec-hash-stamped):
+        # the exchange-schedule lane added in PR 5
+        "schedules": schedules,
         "sweep": sweep_entry,
     }
     if results_path is None and not smoke:
@@ -211,6 +247,9 @@ def run(smoke=False, results_path=None, iters=None):
 
     rows = [(f"protocol/{name}", 1e6 / sps, f"steps_per_sec={sps:.1f}")
             for name, sps in engines.items()]
+    rows += [(f"protocol/sched_{name}", 1e6 / d["steps_per_sec"],
+              f"steps_per_sec={d['steps_per_sec']:.1f} f1={d['f1']:.3f}")
+             for name, d in schedules.items()]
     rows += [
         ("protocol/slice_vs_masked", 0.0,
          f"x{entry['slice_speedup_vs_masked']:.2f}"),

@@ -16,29 +16,34 @@ def main() -> None:
                     help="full client range 2..10, 3 seeds (slow)")
     ap.add_argument("--smoke", action="store_true",
                     help="fast perf-regression canary (~1 min): runs ONLY "
-                         "the protocol lane (engine + sweep throughput) at "
+                         "the protocol lane (engine + schedule + sweep "
+                         "throughput) and the staleness schedule sweep at "
                          "toy sizes and skips the figures, table2, "
                          "kernels, roofline, and ablations lanes; nothing "
                          "is written to benchmarks/results/. Paired with "
                          "the 'fast' pytest marker in scripts/ci.sh.")
     ap.add_argument("--only", default=None,
                     help="comma list of lanes to run: figures,table2,"
-                         "kernels,roofline,ablations,protocol "
+                         "kernels,roofline,ablations,protocol,staleness "
                          "(default: all; incompatible with --smoke)")
     args = ap.parse_args()
     which = set((args.only or
-                 "figures,table2,kernels,roofline,ablations,protocol"
-                 ).split(","))
+                 "figures,table2,kernels,roofline,ablations,protocol,"
+                 "staleness").split(","))
     if args.smoke:
         if args.only:
-            ap.error("--smoke runs only the protocol lane; drop --only")
-        which = {"protocol"}
+            ap.error("--smoke runs only the protocol + staleness "
+                     "lanes; drop --only")
+        which = {"protocol", "staleness"}
 
     rows = []
     t0 = time.time()
     if "protocol" in which:
         from benchmarks import protocol_bench
         rows += protocol_bench.run(smoke=args.smoke)
+    if "staleness" in which:
+        from benchmarks import staleness
+        rows += staleness.run(smoke=args.smoke)
     if "kernels" in which:
         from benchmarks import kernels_bench
         rows += kernels_bench.run()

@@ -1,0 +1,113 @@
+"""Staleness / participation tolerance: how much accuracy De-VertiFL's
+knowledge exchange gives up when the exchange is allowed to lag
+(stale_k) and clients drop out of rounds (partial) -- the relaxations
+async/pipelined deployments actually make.
+
+The whole k x participation grid runs as ONE padded lane batch through
+``repro.core.sweep.run_padded_cells``: schedule (k, p) values are
+traced per-lane state, so every cell shares a single compiled round
+(``round_traces == 1`` is recorded in the entry).  Results append to
+``benchmarks/results/BENCH_staleness.json`` (same append-only rules as
+BENCH_protocol.json), one dated git-SHA-keyed entry per run, each cell
+stamped with the ``spec_hash`` of the ExperimentSpec it corresponds
+to.
+
+Run:    PYTHONPATH=src python -m benchmarks.staleness
+Smoke:  PYTHONPATH=src python -m benchmarks.staleness --smoke
+        (toy sizes, no result-file write; the scripts/ci.sh
+        schedule-smoke lane runs this)
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+
+import jax
+
+from benchmarks.protocol_bench import RESULTS, _append_entry
+from repro.api import ExperimentSpec, git_sha, spec_grid
+from repro.core.sweep import run_padded_cells
+
+FULL = dict(dataset="mnist", n_clients=3, seeds=(0, 1), rounds=3,
+            epochs=2, n_samples=2000, ks=(0, 1, 2, 4, 8),
+            participations=(1.0, 0.8, 0.5))
+SMOKE = dict(dataset="mnist", n_clients=3, seeds=(0,), rounds=1,
+             epochs=1, n_samples=512, ks=(0, 2),
+             participations=(1.0, 0.5))
+
+
+def schedule_name(k: int, p: float) -> str:
+    """The canonical schedule string of one (staleness, participation)
+    grid cell ("sync" for the paper-literal corner)."""
+    parts = []
+    if k > 0:
+        parts.append(f"stale_k:{k}")
+    if p < 1.0:
+        parts.append(f"partial:{p:g}")
+    return "+".join(parts) or "sync"
+
+
+def run(smoke=False, results_path=None):
+    """Sweep k x participation, append the trajectory entry, return
+    bench CSV rows.  smoke=True shrinks to toy sizes and (unless
+    results_path is given) skips the file write."""
+    cfg = SMOKE if smoke else FULL
+    ks, ps = cfg["ks"], cfg["participations"]
+    schedules = tuple(schedule_name(k, p) for k in ks for p in ps)
+    specs = spec_grid(
+        datasets=(cfg["dataset"],), modes=("devertifl",),
+        client_counts=(cfg["n_clients"],), seeds=cfg["seeds"],
+        schedules=schedules, rounds=cfg["rounds"], epochs=cfg["epochs"],
+        n_samples=cfg["n_samples"])
+    out = run_padded_cells(cfg["dataset"], "devertifl", specs)
+
+    grid, rows = {}, []
+    sync_f1 = None
+    for spec in specs:
+        key = f"{spec.schedule}/{spec.n_clients}" \
+            if schedules != ("sync",) else spec.n_clients
+        cell = out["cells"][key]
+        grid[spec.schedule] = {
+            "f1_mean": cell["f1_mean"], "f1_std": cell["f1_std"],
+            "acc_mean": cell["acc_mean"],
+            "final_loss_mean": cell["final_loss_mean"],
+            "spec_hash": spec.spec_hash,
+        }
+        if spec.schedule == "sync":
+            sync_f1 = cell["f1_mean"]
+        rows.append((f"staleness/{spec.schedule}", 0.0,
+                     f"f1={cell['f1_mean']:.3f}"))
+
+    entry = {
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "config": {k: v for k, v in cfg.items()},
+        "round_traces": out["round_traces"],
+        "lanes": out["lanes"],
+        "devices": out["devices"],
+        # the trajectory: accuracy as a function of staleness depth
+        # and participation, sync as the reference corner
+        "sync_f1": sync_f1,
+        "grid": grid,
+    }
+    if results_path is None and not smoke:
+        os.makedirs(RESULTS, exist_ok=True)
+        results_path = os.path.join(RESULTS, "BENCH_staleness.json")
+    if results_path is not None:
+        _append_entry(entry, results_path)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Staleness/participation-vs-accuracy sweep "
+                    "(appends to BENCH_staleness.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, no result-file write")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(x) for x in r))

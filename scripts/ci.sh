@@ -4,12 +4,17 @@
 #   scripts/ci.sh                 # all lanes (local pre-commit default)
 #   scripts/ci.sh fast bench      # `fast` pytest marker + bench smoke
 #   scripts/ci.sh examples        # examples smoke (reduced configs)
+#   scripts/ci.sh schedule-smoke  # exchange-schedule suite + bench
 #
 # Lanes: fast (the `fast` pytest marker suite), bench
-# (benchmarks/run.py --smoke: protocol engine + sweep throughput at toy
-# sizes, no result-file writes), examples (examples/quickstart.py and
-# examples/federated_training.py --smoke -- keeps the spec-driven
-# README snippets from rotting).  Full tier-1 is
+# (benchmarks/run.py --smoke: protocol engine + schedule + sweep
+# throughput and the staleness sweep at toy sizes, no result-file
+# writes), schedule-smoke (tests/test_schedule.py -- the
+# repro.schedule subsystem: sync bitwise pins, stale/double-buffer/
+# partial rounds, schedule lane sweeps), examples
+# (examples/quickstart.py, examples/federated_training.py --smoke and
+# examples/staleness_sweep.py -- keeps the spec-driven README
+# snippets from rotting).  Full tier-1 is
 # `PYTHONPATH=src python -m pytest -x -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -19,8 +24,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 LANES=("${@:-all}")
 for lane in "${LANES[@]}"; do
   case "$lane" in
-    all|fast|bench|examples) ;;
-    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench examples)" >&2
+    all|fast|bench|schedule-smoke|examples) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke examples)" >&2
        exit 2 ;;
   esac
 done
@@ -42,10 +47,19 @@ if want bench; then
   python -m benchmarks.run --smoke
 fi
 
+if want schedule-smoke; then
+  echo "== tests/test_schedule.py (exchange-schedule suite) =="
+  # (the staleness bench smoke itself runs in the bench lane via
+  # benchmarks/run.py --smoke, and test_staleness_bench_smoke_appends
+  # covers it here -- no second standalone invocation)
+  python -m pytest -q tests/test_schedule.py
+fi
+
 if want examples; then
   echo "== examples smoke (reduced config) =="
   python examples/quickstart.py
   python examples/federated_training.py --smoke
+  python examples/staleness_sweep.py
 fi
 
 echo "ci.sh: all green (${LANES[*]})"

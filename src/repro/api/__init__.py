@@ -19,7 +19,9 @@ the device mesh (exactly ``repro.core.sweep``'s engine)::
     grid = run_grid(spec_grid(datasets=("mnist",), seeds=(0, 1)))
 
 Extend any axis through the registries: :func:`register_dataset`,
-:func:`register_mode`, :func:`register_first_layer`.  Legacy entry
+:func:`register_mode`, :func:`register_first_layer`,
+:func:`register_schedule` (the exchange-schedule axis: ``sync`` /
+``stale_k:k`` / ``double_buffer`` / ``partial:p``).  Legacy entry
 points (``train_federation``, ``ProtocolConfig``, ``SweepConfig``)
 remain as thin internals underneath; spec-driven runs reproduce them
 bit-for-bit (tests/test_api.py).  Contracts: docs/ARCHITECTURE.md
@@ -36,6 +38,9 @@ from repro.api.session import (  # noqa: F401
 from repro.core.protocol import register_first_layer  # noqa: F401
 from repro.data.registry import (  # noqa: F401
     DatasetEntry, dataset_names, get_dataset, register_dataset,
+)
+from repro.schedule import (  # noqa: F401
+    Schedule, get_schedule, register_schedule, schedule_names,
 )
 
 

@@ -41,18 +41,33 @@ import numpy as np
 
 from repro.api.modes import get_mode
 from repro.api.spec import ExperimentSpec
-from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, load_checkpoint, load_entry,
+                              save_checkpoint)
 from repro.core import sweep as SW
 from repro.core.baselines import SplitNN, SplitNNConfig
 from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
 
-RESULT_SCHEMA_VERSION = 1
+# 2 (PR 5): specs carry a ``schedule`` field; Session checkpoints grew
+# a ``sched`` subtree (the exchange-schedule scan-carry state -- stale
+# ring buffers / double-buffer slots; empty for sync) and a
+# ``schedule_hash`` stamp that resume() verifies before loading, so a
+# checkpoint written under one schedule cannot silently continue under
+# another.  Both changes are additive.
+RESULT_SCHEMA_VERSION = 2
 _CKPT_NAME = "session"
 
 
 def _hash_array(hex_hash: str) -> np.ndarray:
     """16-hex-char hash -> uint8[8], checkpointable alongside params."""
     return np.frombuffer(bytes.fromhex(hex_hash), np.uint8)
+
+
+def _schedule_hash(schedule: str) -> str:
+    """Process-stable 16-hex-char id of a canonical schedule spec
+    string -- the checkpoint stamp resume() verifies."""
+    import hashlib
+    return hashlib.sha256(
+        ("schedule:" + schedule).encode()).hexdigest()[:16]
 
 
 @lru_cache(maxsize=1)
@@ -118,16 +133,20 @@ def _protocol_config(spec: ExperimentSpec, internal: str) -> ProtocolConfig:
         batch_size=spec.batch_size, lr=spec.lr,
         exchange_at=spec.exchange_at, mode=internal, fedavg=spec.fedavg,
         seed=spec.seed, n_samples=spec.n_samples, engine=spec.engine,
-        first_layer=spec.first_layer, max_clients=spec.max_clients)
+        first_layer=spec.first_layer, schedule=spec.schedule,
+        max_clients=spec.max_clients)
 
 
-def _sweep_config(spec: ExperimentSpec, client_counts) -> SW.SweepConfig:
+def _sweep_config(spec: ExperimentSpec, client_counts,
+                  schedules=None) -> SW.SweepConfig:
     return SW.SweepConfig(
         client_counts=tuple(client_counts), seeds=spec.seeds,
         rounds=spec.rounds, epochs=spec.epochs,
         batch_size=spec.batch_size, lr=spec.lr,
         exchange_at=spec.exchange_at, fedavg=spec.fedavg,
-        n_samples=spec.n_samples, first_layer=spec.first_layer)
+        n_samples=spec.n_samples, first_layer=spec.first_layer,
+        schedules=(tuple(schedules) if schedules is not None
+                   else (spec.schedule,)))
 
 
 class Session:
@@ -219,12 +238,39 @@ class Session:
                 "this spec's hash; raise rounds or point at a "
                 "different checkpoint_dir")
         fed = self.federation
+        # verify the schedule stamp FIRST: a checkpoint written under
+        # a different exchange schedule carries differently-shaped
+        # schedule state (stale ring buffers, double-buffer slots),
+        # and the structured load below would fail with a misleading
+        # shape error instead of naming the actual mismatch
+        want_sched = _hash_array(_schedule_hash(spec.schedule))
+        got_sched = load_entry(spec.checkpoint_dir, step,
+                               "schedule_hash", name=_CKPT_NAME)
+        if got_sched is None:
+            if spec.schedule != "sync":
+                raise ValueError(
+                    f"checkpoint in {spec.checkpoint_dir!r} carries no "
+                    "schedule stamp (written by a pre-schedule "
+                    f"writer, i.e. under schedule='sync'); it cannot "
+                    f"resume under schedule={spec.schedule!r} -- the "
+                    "saved state has no schedule buffers to restore")
+        elif not np.array_equal(got_sched, want_sched):
+            raise ValueError(
+                f"checkpoint in {spec.checkpoint_dir!r} was written "
+                "under a different exchange schedule than this spec's "
+                f"{spec.schedule!r}: resuming would splice mismatched "
+                "schedule state (stale buffers / participation "
+                "stream) into this run; rebuild the spec with the "
+                "original schedule or use a fresh checkpoint_dir")
         init_key, _ = train_keys(jax.random.PRNGKey(spec.seed))
         params_like = fed.init_params(init_key)
         like = {"params": params_like,
                 "opt_state": jax.vmap(fed.opt.init)(params_like),
                 "step_idx": jnp.zeros((), jnp.int32),
+                "sched": fed.init_sched_state(),
                 "resume_hash": _hash_array(spec.resume_hash)}
+        if got_sched is not None:
+            like["schedule_hash"] = want_sched
         state = load_checkpoint(spec.checkpoint_dir, step, like,
                                 name=_CKPT_NAME)
         if not np.array_equal(state["resume_hash"],
@@ -236,11 +282,12 @@ class Session:
                 "into this spec's RunResult")
         state = jax.tree.map(jnp.asarray,
                              {k: v for k, v in state.items()
-                              if k != "resume_hash"})
+                              if k not in ("resume_hash",
+                                           "schedule_hash")})
         return self._run_federated(
             start_round=step,
             state=(state["params"], state["opt_state"],
-                   state["step_idx"]),
+                   state["step_idx"], state["sched"]),
             resumed_from=step)
 
     def predict(self, x, params=None):
@@ -277,19 +324,21 @@ class Session:
             params = fed.init_params(init_key)
             opt_state = jax.vmap(fed.opt.init)(params)
             step_idx = jnp.zeros((), jnp.int32)
+            sched_state = fed.init_sched_state()
         else:
-            params, opt_state, step_idx = state
+            params, opt_state, step_idx, sched_state = state
         history = []
         t0 = time.perf_counter()
         for r in range(start_round, spec.rounds):
             rkey = jax.random.fold_in(loop_key, r)
             if spec.engine == "scan":
-                params, opt_state, step_idx, losses = fed._round(
-                    params, opt_state, step_idx, rkey,
-                    fed._xtr, fed._ytr, fed._lay)
+                params, opt_state, step_idx, sched_state, losses = \
+                    fed._round(params, opt_state, step_idx, sched_state,
+                               rkey, fed._xtr, fed._ytr, fed._lay)
             else:
-                params, opt_state, step_idx, losses = fed._python_round(
-                    params, opt_state, step_idx, rkey)
+                params, opt_state, step_idx, sched_state, losses = \
+                    fed._python_round(params, opt_state, step_idx,
+                                      sched_state, rkey)
             if spec.eval_every and (r + 1) % spec.eval_every == 0:
                 ev = fed.evaluate(params)
                 ev["round"] = r
@@ -301,8 +350,10 @@ class Session:
                 save_checkpoint(
                     spec.checkpoint_dir, r + 1,
                     {"params": params, "opt_state": opt_state,
-                     "step_idx": step_idx,
-                     "resume_hash": _hash_array(spec.resume_hash)},
+                     "step_idx": step_idx, "sched": sched_state,
+                     "resume_hash": _hash_array(spec.resume_hash),
+                     "schedule_hash": _hash_array(
+                         _schedule_hash(spec.schedule))},
                     name=_CKPT_NAME)
         jax.block_until_ready(params)
         wall = time.perf_counter() - t0
@@ -372,8 +423,9 @@ def build(spec: ExperimentSpec) -> Session:
 # ---------------------------------------------------------------------------
 # spec grids
 # ---------------------------------------------------------------------------
-# grid cells must agree on everything but (dataset, mode, n_clients):
-# they share one compiled round function per (dataset, mode) group
+# grid cells must agree on everything but (dataset, mode, schedule,
+# n_clients): they share one compiled round function per
+# (dataset, mode) group (schedule and count are vmapped lane axes)
 _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
                 "exchange_at", "fedavg", "engine", "first_layer",
                 "n_samples", "shard")
@@ -381,14 +433,18 @@ _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
 
 def spec_grid(datasets=("mnist", "fmnist", "titanic", "bank"),
               modes=("devertifl", "non_federated", "verticomb"),
-              client_counts=(2, 3, 5), seeds=(0, 1, 2), **common):
-    """The cartesian datasets x modes x client_counts spec grid (the
-    axes the paper's Table 2 varies).  ``common`` forwards to every
-    ExperimentSpec (rounds=, epochs=, first_layer=, ...)."""
+              client_counts=(2, 3, 5), seeds=(0, 1, 2),
+              schedules=("sync",), **common):
+    """The cartesian datasets x modes x schedules x client_counts spec
+    grid (the axes the paper's Table 2 varies, plus the PR 5 exchange
+    schedule axis -- staleness-tolerance grids are spec grids too).
+    ``common`` forwards to every ExperimentSpec (rounds=, epochs=,
+    first_layer=, ...)."""
     return tuple(
         ExperimentSpec(dataset=ds, mode=mode, n_clients=nc, seeds=seeds,
-                       **common)
-        for ds in datasets for mode in modes for nc in client_counts)
+                       schedule=sched, **common)
+        for ds in datasets for mode in modes for sched in schedules
+        for nc in client_counts)
 
 
 def _grid_groups(specs):
@@ -421,11 +477,32 @@ def _grid_groups(specs):
     for s in specs:
         gk = (s.dataset, s.mode)
         g = groups.setdefault(gk, [])
-        if any(p.n_clients == s.n_clients for p in g):
+        if any(p.n_clients == s.n_clients and p.schedule == s.schedule
+               for p in g):
             raise ValueError(f"duplicate grid cell {s.dataset}/{s.mode}/"
-                             f"{s.n_clients}")
+                             f"{s.schedule}/{s.n_clients}")
         g.append(s)
     return list(groups.items())
+
+
+def _group_axes(group):
+    """Ordered-unique (client_counts, schedules) of one (dataset, mode)
+    spec group; the group must cover the full schedule x count
+    cartesian (every schedule lane reuses one padded count batch)."""
+    counts, schedules = [], []
+    for s in group:
+        if s.n_clients not in counts:
+            counts.append(s.n_clients)
+        if s.schedule not in schedules:
+            schedules.append(s.schedule)
+    want = {(sc, nc) for sc in schedules for nc in counts}
+    got = {(s.schedule, s.n_clients) for s in group}
+    if got != want or len(group) != len(want):
+        raise ValueError(
+            f"spec grid group {group[0].dataset}/{group[0].mode} must "
+            f"cover the full schedule x client-count cartesian "
+            f"{sorted(want)}; got {sorted(got)}")
+    return tuple(counts), tuple(schedules)
 
 
 def sweep_config_for_specs(specs):
@@ -438,8 +515,9 @@ def sweep_config_for_specs(specs):
             f"{[f'{ds}/{m}' for (ds, m), _ in groups]}; use "
             "repro.api.run_grid for multi-group spec grids")
     (ds, mode), group = groups[0]
-    counts = tuple(s.n_clients for s in group)
-    return ds, get_mode(mode).internal, _sweep_config(group[0], counts)
+    counts, schedules = _group_axes(group)
+    return ds, get_mode(mode).internal, _sweep_config(group[0], counts,
+                                                      schedules)
 
 
 def run_grid(specs, shard=None):
@@ -447,17 +525,23 @@ def run_grid(specs, shard=None):
     mode) group -- exactly ``sweep.run_grid``'s execution and schema
     ({"cells": {"ds/mode/n": cell}, "compare": ...}), with each cell
     additionally stamped with the ``spec_hash`` of the spec that
-    produced it.  ``shard`` overrides the specs' shard policy."""
+    produced it.  A non-default schedule axis inserts the schedule
+    into the keys ("ds/mode/sched/n"; sync-only grids keep the
+    historical keys).  ``shard`` overrides the specs' shard policy."""
     cells, compare = {}, {}
     for (ds, mode), group in _grid_groups(specs):
-        counts = tuple(s.n_clients for s in group)
+        counts, schedules = _group_axes(group)
         out = SW.run_padded_cells(
-            ds, get_mode(mode).internal, _sweep_config(group[0], counts),
+            ds, get_mode(mode).internal,
+            _sweep_config(group[0], counts, schedules),
             shard=group[0].shard if shard is None else shard)
+        sync_only = schedules == ("sync",)
         for s in group:
-            cell = out["cells"][s.n_clients]
+            ck = s.n_clients if sync_only else \
+                f"{s.schedule}/{s.n_clients}"
+            cell = out["cells"][ck]
             cell["spec_hash"] = s.spec_hash
-            cells[f"{ds}/{mode}/{s.n_clients}"] = cell
-            compare.setdefault(f"{ds}/{s.n_clients}", {})[mode] = \
+            cells[f"{ds}/{mode}/{ck}"] = cell
+            compare.setdefault(f"{ds}/{ck}", {})[mode] = \
                 cell["f1_mean"]
     return {"cells": cells, "compare": compare}

@@ -66,6 +66,13 @@ class ExperimentSpec:
     fedavg: bool = True
     engine: str = "scan"            # scan | python (reference loop)
     first_layer: str = "auto"       # auto | pallas | slice | masked | custom
+    # Exchange schedule (repro.schedule spec string, validated against
+    # the schedule registry and canonicalized): "sync" | "stale_k:k" |
+    # "double_buffer" | "partial:p[:det]" | "stale_k:k+partial:p" |
+    # a register_schedule name.  Non-sync schedules run devertifl
+    # federations only.  The default "sync" is EXCLUDED from
+    # spec_hash so every pre-existing sync spec keeps its id.
+    schedule: str = "sync"
     max_clients: Optional[int] = None   # pad client axis with dead slots
     shard: Union[str, bool, int] = "auto"   # grid lanes: "auto"|False|int
     n_samples: Optional[int] = None     # dataset size override (speed)
@@ -94,6 +101,20 @@ class ExperimentSpec:
         # alias cannot fork spec_hash: same experiment, same id
         object.__setattr__(self, "mode", mode.name)
         FIRST_LAYERS.get(self.first_layer)       # raises w/ options
+        from repro.schedule import get_schedule
+        sched = get_schedule(self.schedule)      # raises w/ options
+        # canonicalize ("stale_k" -> "stale_k:1") so formatting cannot
+        # fork spec_hash; degenerate members of non-sync families
+        # (stale_k:0, partial:1.0) keep their literal identity -- they
+        # run the schedule engine and are proven bitwise-equal to sync
+        # by test, not collapsed by aliasing
+        object.__setattr__(self, "schedule", sched.spec)
+        if not sched.is_sync and mode.internal != "devertifl":
+            raise ValueError(
+                f"schedule {sched.spec!r} requires mode='devertifl' "
+                f"(the scheduled dataflow is the forward "
+                f"HiddenOutputExchange); mode {self.mode!r} supports "
+                "schedule='sync' only")
         if self.first_layer == "auto":
             # resolve backend-dependent "auto" NOW so the spec (and
             # its hash) records the lane that actually runs -- two
@@ -165,6 +186,12 @@ class ExperimentSpec:
     def _hash(self, extra_exclude=()) -> str:
         d = {k: v for k, v in self.to_dict().items()
              if k not in HASH_EXCLUDE and k not in extra_exclude}
+        # the schedule axis arrived after spec_hash shipped: the
+        # default "sync" is dropped from the hashed dict so every
+        # pre-existing sync spec keeps its id (bench rows stay
+        # joinable across the PR); non-sync schedules fork the hash
+        if d.get("schedule") == "sync":
+            del d["schedule"]
         blob = json.dumps(d, sort_keys=True, default=list)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 

@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    latest_step, load_checkpoint, load_entry, save_checkpoint,
+)

@@ -64,6 +64,17 @@ def latest_step(directory, name="state"):
     return max(steps) if steps else None
 
 
+def load_entry(directory, step, key, name="state"):
+    """Read ONE flattened entry from a saved checkpoint (None if the
+    checkpoint has no such key).  Lets callers verify stamp entries --
+    e.g. the Session schedule guard -- and fail with an actionable
+    error BEFORE attempting a full structured load whose like_tree
+    shapes would otherwise produce a misleading mismatch message."""
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    with np.load(path) as data:
+        return data[key] if key in data.files else None
+
+
 def load_checkpoint(directory, step, like_tree, name="state"):
     """Restore into the structure of like_tree (values replaced; leaves
     are cast to the like leaf's dtype, a no-op for same-dtype

@@ -3,8 +3,9 @@
 # HiddenOutputExchange, local backward, P2P FedAvg), plus the baselines
 # it is evaluated against.
 from repro.core.protocol import (  # noqa: F401
-    DeVertiFL, ProtocolConfig, arch_for, make_round_fn, make_step_fn,
-    register_first_layer, train_federation,
+    DeVertiFL, ProtocolConfig, arch_for, exchange_width, make_round_fn,
+    make_step_fn, register_first_layer, resolve_schedule,
+    train_federation,
 )
 from repro.core.sweep import SweepConfig, run_cell, run_grid  # noqa: F401
 from repro.core.exchange import hidden_output_exchange  # noqa: F401

@@ -47,6 +47,30 @@ def hidden_output_exchange(h_all, differentiable=False, client_mask=None):
     return h_all + peers
 
 
+def scheduled_exchange(h_all, h_ref, eff_mask):
+    """Exchange where the broadcast tensors come from a schedule's
+    reference stack (repro.schedule): client i consumes its OWN
+    current ``h_all[i]`` plus the eff_mask-weighted sum of ``h_ref``
+    excluding its own reference contribution.  ``h_ref`` is data (a
+    stop-gradient current stack, a stale ring slot, or a
+    double-buffer front), so gradients flow only through ``h_all`` --
+    devertifl semantics by construction.
+
+    ``eff_mask`` composes liveness with per-round participation: a
+    dropped client's reference term is an exact +0.0 in the sum (it
+    sends nothing) while its own row still receives the participants'
+    total (it missed the round; the round did not miss it).
+
+    With ``h_ref == stop_gradient(h_all)`` and an all-live eff_mask
+    this is the same reduction order as ``hidden_output_exchange(...,
+    differentiable=False)`` -- bit-for-bit, which is how the
+    degenerate schedules (stale_k:0, partial:1.0) reduce to sync
+    (tests/test_schedule.py)."""
+    hm = h_ref * eff_mask[:, None, None]
+    total = hm.sum(axis=0, keepdims=True)           # [1, B, H]
+    return h_all + (total - hm)
+
+
 def fedavg(stacked_params, client_mask=None):
     """P2P weight exchange + FedAvg (Algorithm 1 lines 16-19): every
     client receives every peer's weights and averages. stacked_params

@@ -61,14 +61,26 @@ are bit-for-bit the unpadded run's in all three first-layer lanes
 stack different client counts on one vmapped lane axis and compile a
 dataset x mode grid once.
 
+Exchange schedules
+~~~~~~~~~~~~~~~~~~
+``ProtocolConfig.schedule`` selects WHICH exchange tensor each client
+consumes at each scanned step (the ``repro.schedule`` subsystem):
+"sync" (default) keeps the paper-literal code path below untouched;
+"stale_k:k", "double_buffer", and "partial:p" thread a schedule-state
+slot through the scan carry (ring buffers of stale hidden stacks, the
+two-slot round pipeline, per-round participation masks composed with
+``client_mask``).  Non-sync schedules are devertifl-mode only; the
+scan and python engines drive the same schedule hooks and stay
+bit-for-bit.  See docs/ARCHITECTURE.md section 7.
+
 ``DeVertiFL.train`` drives make_round_fn under jit (engine="scan", the
 default). A per-batch host-dispatched loop is retained as
 engine="python" (same jitted step, host-side batch dispatch). Both
 engines consume the identical device-generated permutation stream, so
 their loss/F1 trajectories match bit-for-bit at a fixed seed
 (tests/test_engine.py asserts this). repro.core.sweep vmaps
-make_round_fn over a (seed x client-count) lane axis for grid
-experiments and shards the lanes over the device mesh.
+make_round_fn over a (seed x client-count x schedule) lane axis for
+grid experiments and shards the lanes over the device mesh.
 
 See docs/ARCHITECTURE.md for the scan-round key-derivation and
 PermPlan contracts.
@@ -115,6 +127,12 @@ class ProtocolConfig:
     n_samples: Optional[int] = None     # dataset size override (speed)
     engine: str = "scan"                # scan | python (reference loop)
     first_layer: str = "auto"           # auto | pallas | slice | masked
+    # Exchange schedule (repro.schedule spec string): which exchange
+    # tensor each client consumes at each step.  "sync" is the
+    # paper-literal engine path, untouched; "stale_k:2",
+    # "double_buffer", "partial:0.8", "stale_k:4+partial:0.5" run the
+    # schedule-aware round (devertifl mode only).
+    schedule: str = "sync"
     # Pad the client axis to this length with dead (masked) slots; None
     # means no padding. Live trajectories are bit-for-bit unchanged --
     # padding only buys shape-uniformity across client counts.
@@ -181,6 +199,40 @@ def resolve_first_layer(pcfg) -> str:
                 "first_layer='masked'")
         fl = "masked"
     return fl
+
+
+def exchange_width(model, exchange_at) -> int:
+    """Trailing width of the exchanged tensor -- what a schedule
+    buffer must hold per client per batch row: logits (exchange_at ==
+    -1), the raw input (0), or the hidden width (after layer k)."""
+    if exchange_at == -1:
+        return model.n_classes
+    if exchange_at == 0:
+        return model.in_features
+    return model.hidden
+
+
+def resolve_schedule(pcfg, model, n_train):
+    """pcfg.schedule -> (Schedule, impl).  ``impl`` is None for the
+    literal "sync" spec: the legacy engine path runs untouched, which
+    is what keeps the paper-literal schedule bit-for-bit pinned.
+    Non-sync schedules (including the degenerate stale_k:0 /
+    partial:1.0, which run the schedule engine and reduce bitwise) are
+    devertifl-mode only: the forward HiddenOutputExchange is what is
+    being scheduled, and the backward-exchange/non-federated baselines
+    have no data-only peer term for a buffer to replace."""
+    from repro.schedule import get_schedule, make_schedule_impl
+    sched = get_schedule(pcfg.schedule)
+    if sched.is_sync:
+        return sched, None
+    if pcfg.mode != "devertifl":
+        raise ValueError(
+            f"schedule {sched.spec!r} requires mode='devertifl'; mode "
+            f"{pcfg.mode!r} supports schedule='sync' only")
+    impl = make_schedule_impl(
+        sched, pcfg.padded_clients, min(pcfg.batch_size, n_train),
+        exchange_width(model, pcfg.exchange_at))
+    return sched, impl
 
 
 # ---------------------------------------------------------------------------
@@ -495,25 +547,29 @@ def call_fedavg(fedavg_fn, params, client_mask):
 
 
 def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None,
-                  first_layer_fn=None):
+                  first_layer_fn=None, sched_impl=None):
     """One De-VertiFL round as a single jittable function: generate the
     epoch permutations on device, lax.scan the step over every batch of
     every epoch (step_idx carried in the scan), then apply the P2P
     FedAvg (Algorithm 1 lines 16-19) to the carry-out parameters.
 
-    Signature: round_fn(params, opt_state, step_idx, key, xtr, ytr,
-    lay) -> (params, opt_state, step_idx, losses[epochs*n_batches]).
-    Data (canonical column order) and the LayoutArrays are arguments so
-    a sweep can vmap the whole round over a leading lane axis (seeds,
-    or seeds x client counts on padded layouts).
+    Signature: round_fn(params, opt_state, step_idx, sched_state, key,
+    xtr, ytr, lay) -> (params, opt_state, step_idx, sched_state,
+    losses[epochs*n_batches]).  sched_state is the exchange-schedule
+    carry slot (repro.schedule; ``{}`` for sync -- the sync body is
+    the untouched legacy path and merely threads it through).  Data
+    (canonical column order) and the LayoutArrays are arguments so a
+    sweep can vmap the whole round over a leading lane axis (seeds,
+    seeds x client counts on padded layouts, and now schedules).
     fedavg_fn overrides the uniform-mean aggregation (e.g. the
     weighted-FedAvg ablation); it is baked into the jitted round, so
     pass it here rather than patching afterwards.  first_layer_fn is
-    forwarded to make_step_fn (padded-sweep override).
+    forwarded to make_step_fn (padded-sweep override).  sched_impl
+    overrides the schedule impl (sweeps pass a lane impl whose ring is
+    sized across lanes); by default it resolves from pcfg.schedule.
     """
-    step = make_step_fn(model, opt, pcfg, layout=layout,
-                        first_layer_fn=first_layer_fn)
-    perm_fn = make_perm_fn(pcfg, n_train).perms
+    plan = make_perm_fn(pcfg, n_train)
+    perm_fn = plan.perms
     do_fedavg = pcfg.fedavg and pcfg.mode != "non_federated"
     fedavg_fn = fedavg_fn or fedavg
     padded = (pcfg.max_clients or 0) > pcfg.n_clients or (
@@ -524,23 +580,71 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None,
             "the client axis is padded (max_clients > n_clients): a "
             "mask-blind aggregator would average dead slots' params "
             "into every live client")
+    impl = sched_impl
+    if impl is None:
+        _, impl = resolve_schedule(pcfg, model, n_train)
 
-    def round_fn(params, opt_state, step_idx, key, xtr, ytr, lay):
+    if impl is None:        # sync: the legacy round, bit-for-bit
+        step = make_step_fn(model, opt, pcfg, layout=layout,
+                            first_layer_fn=first_layer_fn)
+
+        def round_fn(params, opt_state, step_idx, sched_state, key,
+                     xtr, ytr, lay):
+            idx = perm_fn(key)
+
+            def body(carry, batch_idx):
+                params, opt_state, step_idx = carry
+                xb = jnp.take(xtr, batch_idx, axis=0)
+                yb = jnp.take(ytr, batch_idx, axis=0)
+                params, opt_state, loss = step(params, opt_state, lay,
+                                               xb, yb, step_idx)
+                return (params, opt_state, step_idx + 1), loss
+
+            (params, opt_state, step_idx), losses = jax.lax.scan(
+                body, (params, opt_state, step_idx), idx)
+            if do_fedavg:
+                params = call_fedavg(fedavg_fn, params, lay.client_mask)
+            return params, opt_state, step_idx, sched_state, losses
+
+        return round_fn
+
+    # schedule-aware round: round_start draws the round's effective
+    # participation mask, the scan threads the schedule state through
+    # every step, FedAvg weights by the round's mask, round_end runs
+    # the round-granularity hooks (double_buffer's swap)
+    from repro.schedule import make_sched_step_fn
+    if do_fedavg and not accepts_client_mask(fedavg_fn):
+        raise ValueError(
+            "custom fedavg_fn must accept a client_mask= keyword "
+            "under a non-sync exchange schedule: the per-round "
+            "participation mask weights the aggregation")
+    step = make_sched_step_fn(model, opt, pcfg, impl, layout=layout,
+                              first_layer_fn=first_layer_fn)
+    steps_per_round = pcfg.epochs * plan.n_batches
+
+    def round_fn(params, opt_state, step_idx, sched_state, key,
+                 xtr, ytr, lay):
         idx = perm_fn(key)
+        round_idx = step_idx // steps_per_round
+        sched_state, eff_mask = impl.round_start(sched_state, lay, key,
+                                                 round_idx)
 
         def body(carry, batch_idx):
-            params, opt_state, step_idx = carry
+            params, opt_state, step_idx, sched_state = carry
             xb = jnp.take(xtr, batch_idx, axis=0)
             yb = jnp.take(ytr, batch_idx, axis=0)
-            params, opt_state, loss = step(params, opt_state, lay,
-                                           xb, yb, step_idx)
-            return (params, opt_state, step_idx + 1), loss
+            params, opt_state, sched_state, loss = step(
+                params, opt_state, lay, eff_mask, sched_state, xb, yb,
+                step_idx)
+            return (params, opt_state, step_idx + 1, sched_state), loss
 
-        (params, opt_state, step_idx), losses = jax.lax.scan(
-            body, (params, opt_state, step_idx), idx)
+        (params, opt_state, step_idx, sched_state), losses = \
+            jax.lax.scan(body, (params, opt_state, step_idx,
+                                sched_state), idx)
         if do_fedavg:
-            params = call_fedavg(fedavg_fn, params, lay.client_mask)
-        return params, opt_state, step_idx, losses
+            params = call_fedavg(fedavg_fn, params, eff_mask)
+        sched_state = impl.round_end(sched_state)
+        return params, opt_state, step_idx, sched_state, losses
 
     return round_fn
 
@@ -649,21 +753,45 @@ class DeVertiFL:
         pcfg = self.pcfg
         n_train = len(self.xtr)
         fa = self._fedavg_fn or fedavg
-        self._step = jax.jit(
-            make_step_fn(self.model, self.opt, pcfg, layout=self.layout),
-            donate_argnums=(0, 1))
+        self._schedule, self._impl = resolve_schedule(pcfg, self.model,
+                                                      n_train)
         plan = make_perm_fn(pcfg, n_train)
         self.n_batches, self.bs = plan.n_batches, plan.batch_size
+        self._steps_per_round = pcfg.epochs * plan.n_batches
         self._perms = jax.jit(plan.perms)
         self._round = jax.jit(
             make_round_fn(self.model, self.opt, pcfg, n_train,
-                          fedavg_fn=fa, layout=self.layout),
+                          fedavg_fn=fa, layout=self.layout,
+                          sched_impl=self._impl),
             donate_argnums=(0, 1))
         self._fedavg = jax.jit(
             lambda p: call_fedavg(fa, p, self._lay.client_mask),
             donate_argnums=(0,))
         self._predict = jax.jit(
             make_predict_fn(self.model, pcfg, layout=self.layout))
+        if self._impl is None:
+            self._step = jax.jit(
+                make_step_fn(self.model, self.opt, pcfg,
+                             layout=self.layout),
+                donate_argnums=(0, 1))
+        else:
+            # python-engine pieces for the schedule-aware round: the
+            # SAME impl hooks and step builder the scan round bakes
+            # in, jitted separately, so both engines stay bit-for-bit
+            from repro.schedule import make_sched_step_fn
+            self._sched_step = jax.jit(
+                make_sched_step_fn(self.model, self.opt, pcfg,
+                                   self._impl, layout=self.layout),
+                donate_argnums=(0, 1))
+            self._round_start = jax.jit(self._impl.round_start)
+            self._fedavg_sched = jax.jit(
+                lambda p, m: call_fedavg(fa, p, m), donate_argnums=(0,))
+
+    def init_sched_state(self):
+        """Initial exchange-schedule scan-carry state (``{}`` for the
+        sync schedule -- an empty pytree the round threads through)."""
+        return {} if self._impl is None else \
+            self._impl.init_state(self._schedule)
 
     def set_fedavg(self, fedavg_fn):
         """Swap the aggregation function (e.g. weighted FedAvg) and
@@ -690,21 +818,42 @@ class DeVertiFL:
                 "f1_per_client": f1s}
 
     # ------------------------------------------------------------------
-    def _python_round(self, params, opt_state, step_idx, key):
+    def _python_round(self, params, opt_state, step_idx, sched_state,
+                      key):
         """Pre-refactor reference engine: per-batch host dispatch of the
-        jitted step. Consumes the same device permutation stream as the
-        scan engine, so trajectories are identical."""
+        jitted step. Consumes the same device permutation stream (and,
+        under a non-sync schedule, the same round_start/select/
+        round_end hooks) as the scan engine, so trajectories are
+        identical."""
         idx = np.asarray(self._perms(key))
+        do_avg = self.pcfg.fedavg and self.pcfg.mode != "non_federated"
         losses = []
+        if self._impl is None:
+            for b in range(idx.shape[0]):
+                params, opt_state, loss = self._step(
+                    params, opt_state, self._lay,
+                    self._xtr[idx[b]], self._ytr[idx[b]], step_idx)
+                step_idx = step_idx + 1
+                losses.append(loss)
+            if do_avg:
+                params = self._fedavg(params)
+            return params, opt_state, step_idx, sched_state, \
+                jnp.stack(losses)
+        round_idx = step_idx // self._steps_per_round
+        sched_state, eff_mask = self._round_start(sched_state,
+                                                  self._lay, key,
+                                                  round_idx)
         for b in range(idx.shape[0]):
-            params, opt_state, loss = self._step(
-                params, opt_state, self._lay,
+            params, opt_state, sched_state, loss = self._sched_step(
+                params, opt_state, self._lay, eff_mask, sched_state,
                 self._xtr[idx[b]], self._ytr[idx[b]], step_idx)
             step_idx = step_idx + 1
             losses.append(loss)
-        if self.pcfg.fedavg and self.pcfg.mode != "non_federated":
-            params = self._fedavg(params)
-        return params, opt_state, step_idx, jnp.stack(losses)
+        if do_avg:
+            params = self._fedavg_sched(params, eff_mask)
+        sched_state = self._impl.round_end(sched_state)
+        return params, opt_state, step_idx, sched_state, \
+            jnp.stack(losses)
 
     def train(self, key=None, eval_every_round=True, engine=None):
         pcfg = self.pcfg
@@ -714,16 +863,19 @@ class DeVertiFL:
         params = self.init_params(init_key)
         opt_state = jax.vmap(self.opt.init)(params)
         step_idx = jnp.zeros((), jnp.int32)
+        sched_state = self.init_sched_state()
         history = []
         for r in range(pcfg.rounds):
             rkey = jax.random.fold_in(loop_key, r)
             if engine == "scan":
-                params, opt_state, step_idx, losses = self._round(
-                    params, opt_state, step_idx, rkey,
-                    self._xtr, self._ytr, self._lay)
+                params, opt_state, step_idx, sched_state, losses = \
+                    self._round(params, opt_state, step_idx,
+                                sched_state, rkey,
+                                self._xtr, self._ytr, self._lay)
             elif engine == "python":
-                params, opt_state, step_idx, losses = self._python_round(
-                    params, opt_state, step_idx, rkey)
+                params, opt_state, step_idx, sched_state, losses = \
+                    self._python_round(params, opt_state, step_idx,
+                                       sched_state, rkey)
             else:
                 raise ValueError(f"unknown engine {engine!r}")
             if eval_every_round:
@@ -744,8 +896,10 @@ def train_federation(**kw):
     through ``build(spec).run()``, and returns the historical
     ``{"history", "final", "params"}`` dict -- bit-for-bit what
     ``DeVertiFL(ProtocolConfig(**kw)).train()`` returned
-    (tests/test_api.py pins this).  New code should construct the spec
-    directly::
+    (tests/test_api.py pins this).  The ``schedule=`` knob forwards
+    like every other field and defaults to "sync", so legacy callers
+    stay bit-for-bit on the paper-literal engine.  New code should
+    construct the spec directly::
 
         from repro.api import ExperimentSpec, build
         result = build(ExperimentSpec(dataset="mnist", n_clients=5)).run()

@@ -2,17 +2,22 @@
 
 Grid semantics
 --------------
-A sweep is the cartesian grid  datasets x modes x client_counts x
-seeds.  Since PR 3 the engine stacks BOTH the seed axis and the
-client-count axis on one leading **lane** axis: every (n_clients,
-seed) pair is a lane, all client counts are padded to
+A sweep is the cartesian grid  datasets x modes x schedules x
+client_counts x seeds.  Since PR 3 the engine stacks BOTH the seed
+axis and the client-count axis on one leading **lane** axis: every
+(n_clients, seed) pair is a lane, all client counts are padded to
 ``max(client_counts)`` dead slots (``Layout.pad`` -- see
 repro.core.partition), and one jitted, vmapped round function from
 ``repro.core.protocol.make_round_fn`` trains every lane of a
 (dataset, mode) cell group simultaneously.  A dataset x mode grid
 therefore compiles ONCE across all client counts
 (tests/test_padded_engine.py pins the trace count), where previously
-every n_clients value was a separate compile.
+every n_clients value was a separate compile.  Since PR 5 the
+exchange SCHEDULE (repro.schedule) is a lane axis too: staleness
+depth k and participation p ride the traced per-lane schedule state,
+so a staleness-tolerance grid (sync / stale_k / partial lanes) also
+shares that single compile (tests/test_schedule.py pins it; see
+``SweepConfig.schedules`` for the family constraints).
 
 Each lane is an independent federation end to end: its own synthetic
 dataset draw, its own vertical partition, its own parameter init
@@ -95,6 +100,13 @@ class SweepConfig:
     fedavg: bool = True
     n_samples: Optional[int] = None     # dataset size override (speed)
     first_layer: str = "auto"           # auto | pallas | slice | masked
+    # Exchange-schedule lane axis (repro.schedule spec strings).  The
+    # sync/stale_k/partial family rides ONE compiled round -- k and p
+    # are traced per-lane scalars in the schedule state -- so a
+    # staleness-tolerance grid compiles once (round_traces == 1).
+    # Non-sync schedules run devertifl mode only; double_buffer and
+    # custom schedules cannot share a lane axis with other schedules.
+    schedules: Sequence[str] = ("sync",)
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +156,58 @@ def _sweep_first_layer(pcfg, width):
     if fl == "masked":
         return None
     return make_uniform_first_layer_fn(width)
+
+
+# ---------------------------------------------------------------------------
+# exchange-schedule lanes
+# ---------------------------------------------------------------------------
+def _sweep_schedules(scfg, mode, model, n_clients, n_train):
+    """Parse scfg.schedules into (scheds, impl, sync_only) for a lane
+    batch of one (dataset, mode).  sync-only sweeps get impl=None (the
+    untouched legacy round).  Mixed schedule lanes must all belong to
+    the sync/stale_k/partial family: k and p ride the traced schedule
+    state, so ONE ring impl (sized to the largest k) serves every
+    lane under a single trace.  double_buffer is vmappable but carries
+    a differently-shaped state, so it cannot share an axis with other
+    schedules; custom schedules (like custom first layers) may close
+    over per-federation statics and are refused outright."""
+    from repro.schedule import get_schedule, make_schedule_impl
+    if not scfg.schedules:
+        raise ValueError("schedules must name at least one schedule")
+    scheds = tuple(get_schedule(s) for s in scfg.schedules)
+    if len(scheds) == 1 and scheds[0].is_sync:
+        return scheds, None, True
+    if mode != "devertifl":
+        raise ValueError(
+            f"schedules beyond 'sync' require mode='devertifl' sweep "
+            f"cells, got mode {mode!r}")
+    if any(s.custom is not None for s in scheds):
+        raise ValueError(
+            "custom schedules are not supported in sweep lanes (their "
+            "impls may close over per-federation statics the lane "
+            "vmap cannot vary); run them as standalone sessions")
+    if any(s.double_buffer for s in scheds) and len(scheds) > 1:
+        raise ValueError(
+            "double_buffer carries a differently-shaped schedule "
+            "state and cannot share a lane axis with other schedules; "
+            "sweep it as its own single-schedule batch")
+    from repro.core.protocol import exchange_width
+    impl = make_schedule_impl(
+        scheds[0], n_clients, min(scfg.batch_size, n_train),
+        exchange_width(model, scfg.exchange_at),
+        max_k=max(s.k for s in scheds))
+    return scheds, impl, False
+
+
+def _stacked_sched_state(impl, scheds, n_base):
+    """Per-lane initial schedule states, schedule-major over a base
+    lane batch of n_base (count x seed) lanes."""
+    if impl is None:
+        return {}
+    per = [jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_base,) + a.shape),
+        impl.init_state(sc)) for sc in scheds]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *per)
 
 
 # ---------------------------------------------------------------------------
@@ -215,23 +279,24 @@ def _lane_metrics(preds, yte, ytr, lanes):
     return f1s, accs
 
 
-def _train_rounds(vround, vfold, params, opt_state, loop_keys, xtr, ytr,
-                  lay, rounds):
+def _train_rounds(vround, vfold, params, opt_state, sched_state,
+                  loop_keys, xtr, ytr, lay, rounds):
     """Drive `rounds` vmapped rounds and time STEADY STATE only: round
     0 triggers the jit compile, so the clock restarts after it (with
     rounds == 1 the compile is unavoidably included -- matching
     benchmarks/protocol_bench's warmed-up timings).  Shared by
     run_cell and run_padded_cells so the looped-vs-padded benchmark
-    comparison can never diverge on timing protocol.  Returns
+    comparison can never diverge on timing protocol.  sched_state is
+    the per-lane exchange-schedule carry ({} for sync).  Returns
     (params, opt_state, losses, wall, timed_rounds)."""
     step_idx = jnp.zeros((loop_keys.shape[0],), jnp.int32)
     t0 = time.perf_counter()
     losses = None
     timed_rounds = rounds
     for r in range(rounds):
-        params, opt_state, step_idx, losses = vround(
-            params, opt_state, step_idx, vfold(loop_keys, r),
-            xtr, ytr, lay)
+        params, opt_state, step_idx, sched_state, losses = vround(
+            params, opt_state, step_idx, sched_state,
+            vfold(loop_keys, r), xtr, ytr, lay)
         if r == 0 and rounds > 1:
             jax.block_until_ready(losses)
             t0 = time.perf_counter()
@@ -249,17 +314,25 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     n_clients) cell in a single vmapped computation.  One compile per
     (dataset, mode, n_clients): the looped baseline the padded
     multi-count engine (run_padded_cells) is benchmarked against."""
+    if len(scfg.schedules) != 1:
+        raise ValueError(
+            "run_cell takes exactly one schedule; use "
+            "run_padded_cells(schedules=...) for schedule grids")
     pcfg = ProtocolConfig(
         dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
-        n_samples=scfg.n_samples, first_layer=scfg.first_layer)
+        n_samples=scfg.n_samples, first_layer=scfg.first_layer,
+        schedule=scfg.schedules[0])
     model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
     xtr, ytr, xte, yte, lay, keys, layout = _stacked_federations(
         dataset, n_clients, scfg.seeds, scfg.n_samples)
     n_seeds, n_train = xtr.shape[0], xtr.shape[1]
+    scheds, impl, _ = _sweep_schedules(scfg, mode, model, n_clients,
+                                       n_train)
+    sched_state = _stacked_sched_state(impl, scheds, n_seeds)
 
     def init_one(key):
         init_key, loop_key = train_keys(key)
@@ -269,14 +342,15 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
 
     params, opt_state, loop_keys = jax.jit(jax.vmap(init_one))(keys)
 
-    round_fn = make_round_fn(model, opt, pcfg, n_train, layout=layout)
+    round_fn = make_round_fn(model, opt, pcfg, n_train, layout=layout,
+                             sched_impl=impl)
     vround = jax.jit(jax.vmap(round_fn), donate_argnums=(0, 1))
     vpred = jax.jit(jax.vmap(make_predict_fn(model, pcfg, layout=layout)))
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
     params, opt_state, losses, wall, timed_rounds = _train_rounds(
-        vround, vfold, params, opt_state, loop_keys, xtr, ytr, lay,
-        pcfg.rounds)
+        vround, vfold, params, opt_state, sched_state, loop_keys,
+        xtr, ytr, lay, pcfg.rounds)
 
     preds = np.asarray(vpred(params, xte, lay))      # [S, n, B_test]
     yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
@@ -337,20 +411,26 @@ def _coerce_sweep_config(dataset, mode, scfg):
 
 
 def run_padded_cells(dataset, mode, scfg, shard="auto"):
-    """Train the FULL client_counts x seeds lane batch of one
-    (dataset, mode) pair under a single compiled round function,
+    """Train the FULL schedules x client_counts x seeds lane batch of
+    one (dataset, mode) pair under a single compiled round function,
     distributing lanes over the device mesh.  ``scfg`` is a
     SweepConfig, or a sequence of ``repro.api.ExperimentSpec`` sharing
-    one (dataset, mode) whose n_clients values form the count axis.
+    one (dataset, mode) whose n_clients / schedule values form the
+    count and schedule axes.
 
-    Returns {"cells": {n_clients: cell_dict}, "round_traces": int,
+    Returns {"cells": {key: cell_dict}, "round_traces": int,
     "lanes": int, "devices": int, "wall_s": float, "cells_per_sec":
-    float, "steps_per_sec": float} where each cell_dict has the
-    run_cell schema -- except that wall_s is the SHARED batch wall and
-    each cell's steps_per_sec is its lanes' share of it (cells sum to
-    the batch's steps_per_sec).  round_traces counts actual retraces
-    of the round body -- 1 means the whole multi-count batch ran on
-    one compile (pinned in tests).
+    float, "steps_per_sec": float}.  For the default sync-only
+    schedule axis the cell keys stay the historical bare ``n_clients``
+    ints; a non-default schedule axis keys cells as
+    ``"{schedule}/{n_clients}"`` (e.g. ``"stale_k:2/3"``).  Each
+    cell_dict has the run_cell schema plus a ``"schedule"`` field --
+    except that wall_s is the SHARED batch wall and each cell's
+    steps_per_sec is its lanes' share of it (cells sum to the batch's
+    steps_per_sec).  round_traces counts actual retraces of the round
+    body -- 1 means the whole multi-count (and multi-schedule: k and
+    p are traced per-lane state) batch ran on one compile (pinned in
+    tests).
     shard: "auto" (largest dividing device count) | False | int.
     """
     dataset, mode, scfg = _coerce_sweep_config(dataset, mode, scfg)
@@ -369,10 +449,13 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
-    xtr, ytr, xte, yte, lay, keys, lanes, width = _stacked_lanes(
+    xtr, ytr, xte, yte, lay, keys, base_lanes, width = _stacked_lanes(
         dataset, counts, scfg.seeds, scfg.n_samples)
-    n_lanes, n_train = xtr.shape[0], xtr.shape[1]
+    n_base, n_train = xtr.shape[0], xtr.shape[1]
     first = _sweep_first_layer(pcfg, width)
+    scheds, impl, sync_only = _sweep_schedules(scfg, mode, model,
+                                               max_c, n_train)
+    n_sched = len(scheds)
 
     # per-count init (live keys must be split(init_key, nc) -- a
     # count-static derivation -- so init compiles once per count;
@@ -390,8 +473,24 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     opt_state = jax.tree.map(lambda *a: jnp.concatenate(a), *os_)
     loop_keys = jnp.concatenate(lks)
 
+    # schedule-major lane tiling: every schedule reuses the SAME
+    # (count x seed) base batch -- same data, same layouts, same
+    # inits, same key streams -- and differs only in the per-lane
+    # schedule state (traced k / p / det + buffers)
+    if n_sched > 1:
+        def tile(a):
+            return jnp.concatenate([a] * n_sched, 0)
+        xtr, ytr, xte, yte = map(tile, (xtr, ytr, xte, yte))
+        lay = jax.tree.map(tile, lay)
+        loop_keys = tile(loop_keys)
+        params = jax.tree.map(tile, params)
+        opt_state = jax.tree.map(tile, opt_state)
+    sched_state = _stacked_sched_state(impl, scheds, n_base)
+    lanes = [(nc, s) for _ in scheds for (nc, s) in base_lanes]
+    n_lanes = n_base * n_sched
+
     round_fn = make_round_fn(model, opt, pcfg, n_train,
-                             first_layer_fn=first)
+                             first_layer_fn=first, sched_impl=impl)
     traces = 0
 
     def counted_round(*args):
@@ -405,7 +504,7 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
         mesh = jax.make_mesh((n_dev,), ("data",))
         with sh.use_context(mesh):
             spec = sh.logical_spec("sweep_lane")    # -> P("data")
-        vround = shard_map(vround, mesh=mesh, in_specs=(spec,) * 7,
+        vround = shard_map(vround, mesh=mesh, in_specs=(spec,) * 8,
                            out_specs=spec, check_vma=False)
     vround = jax.jit(vround, donate_argnums=(0, 1))
     vpred = jax.jit(jax.vmap(
@@ -413,8 +512,8 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
     params, opt_state, losses, wall, timed_rounds = _train_rounds(
-        vround, vfold, params, opt_state, loop_keys, xtr, ytr, lay,
-        pcfg.rounds)
+        vround, vfold, params, opt_state, sched_state, loop_keys,
+        xtr, ytr, lay, pcfg.rounds)
 
     preds = np.asarray(vpred(params, xte, lay))   # [L, max_c, B_test]
     yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
@@ -424,28 +523,32 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
                                                       n_train).n_batches
     cells = {}
     s = len(scfg.seeds)
-    for ci, nc in enumerate(counts):
-        sl = slice(ci * s, (ci + 1) * s)
-        cells[nc] = {
-            "dataset": dataset, "mode": mode, "n_clients": nc,
-            "seeds": list(scfg.seeds),
-            "f1_per_seed": f1s[sl], "acc_per_seed": accs[sl],
-            "f1_mean": float(np.mean(f1s[sl])),
-            "f1_std": float(np.std(f1s[sl])),
-            "acc_mean": float(np.mean(accs[sl])),
-            "final_loss_mean": float(losses_np[sl, -1].mean()),
-            # the whole multi-count batch trains together, so wall_s is
-            # SHARED across this group's cells and each cell's
-            # steps_per_sec is its own lanes' steps over that shared
-            # wall (cells sum to the batch throughput -- do not read a
-            # single padded cell's rate as a run_cell-style standalone
-            # measurement)
-            "wall_s": wall,
-            "steps_per_sec": steps * s / max(wall, 1e-9),
-        }
+    for si, sc in enumerate(scheds):
+        for ci, nc in enumerate(counts):
+            lo = si * n_base + ci * s
+            sl = slice(lo, lo + s)
+            cells[nc if sync_only else f"{sc.spec}/{nc}"] = {
+                "dataset": dataset, "mode": mode, "n_clients": nc,
+                "schedule": sc.spec,
+                "seeds": list(scfg.seeds),
+                "f1_per_seed": f1s[sl], "acc_per_seed": accs[sl],
+                "f1_mean": float(np.mean(f1s[sl])),
+                "f1_std": float(np.std(f1s[sl])),
+                "acc_mean": float(np.mean(accs[sl])),
+                "final_loss_mean": float(losses_np[sl, -1].mean()),
+                # the whole multi-count batch trains together, so
+                # wall_s is SHARED across this group's cells and each
+                # cell's steps_per_sec is its own lanes' steps over
+                # that shared wall (cells sum to the batch throughput
+                # -- do not read a single padded cell's rate as a
+                # run_cell-style standalone measurement)
+                "wall_s": wall,
+                "steps_per_sec": steps * s / max(wall, 1e-9),
+            }
     return {"cells": cells, "round_traces": traces, "lanes": n_lanes,
             "devices": n_dev, "wall_s": wall,
-            "cells_per_sec": len(counts) / max(wall, 1e-9),
+            "schedules": [sc.spec for sc in scheds],
+            "cells_per_sec": len(cells) / max(wall, 1e-9),
             "steps_per_sec": steps * n_lanes / max(wall, 1e-9)}
 
 

@@ -1,0 +1,15 @@
+# repro.schedule -- the exchange-scheduling subsystem: WHICH exchange
+# tensor each client consumes at each step of the fused scan round.
+# Built-ins: sync (paper-literal), stale_k (ring-buffered stale
+# exchanges), double_buffer (round-pipelined two-slot), partial
+# (per-round participation masks).  See registry.py for the spec
+# grammar and docs/ARCHITECTURE.md section 7 for the scan-carry and
+# extension contracts.
+from repro.schedule.registry import (  # noqa: F401
+    SCHEDULES, Schedule, ScheduleEntry, get_schedule, register_schedule,
+    schedule_names,
+)
+from repro.schedule.engine import (  # noqa: F401
+    PARTICIPATION_TAG, DoubleBufferImpl, LaneScheduleImpl,
+    make_sched_step_fn, make_schedule_impl, participation_mask,
+)

@@ -1,0 +1,481 @@
+"""The repro.schedule exchange-scheduling subsystem.
+
+Contracts pinned here (docs/ARCHITECTURE.md section 7):
+
+  * schedule spec parsing/canonicalization and the registry's
+    actionable unknown-name errors (+ register_schedule extension)
+  * schedule="sync" IS the legacy engine (same code path; pinned
+    bitwise across mode x first_layer x padded lanes), and the
+    degenerate schedule-engine members stale_k:0 / partial:1.0 reduce
+    to sync BIT-FOR-BIT in both the masked and slice lanes
+  * scan and python engines drive identical schedule hooks (bitwise)
+  * buffer-age semantics: stale_k consumes exactly the stack pushed k
+    steps ago; cold-start buffers are zeros, so the first k steps
+    match the exchange-free (non_federated) trajectory; double_buffer
+    round 0 is fully exchange-free
+  * degenerate federations: n_clients=1 and padded n_real=1 lanes
+    train bit-for-bit like their unpadded selves under every schedule
+  * schedule grids compile ONCE across schedule values in
+    run_padded_cells (round_traces == 1), with sync lanes bitwise
+    equal to the sync-only sweep
+  * Session checkpoints round-trip schedule state bitwise; resuming
+    under a different schedule fails with an actionable error
+  * the train_federation shim forwards schedule= and warns with
+    stacklevel=2 (the warning points at the caller)
+  * sync spec_hashes are UNCHANGED by the schedule field (pinned
+    against the pre-schedule hash) and non-sync schedules fork them
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build, run_grid, spec_grid
+from repro.core.protocol import (DeVertiFL, ProtocolConfig,
+                                 train_federation)
+from repro.core.sweep import SweepConfig, run_cell, run_padded_cells
+from repro.schedule import (LaneScheduleImpl, Schedule, get_schedule,
+                            register_schedule, schedule_names)
+
+TINY = dict(dataset="titanic", n_clients=3, rounds=2, epochs=2, seed=0)
+
+
+def _traj(pcfg, engine=None):
+    r = DeVertiFL(pcfg).train(engine=engine)
+    return (np.concatenate([h["round_losses"] for h in r["history"]]),
+            np.array([h["f1"] for h in r["history"]]),
+            r["final"])
+
+
+# ---------------------------------------------------------------------------
+# registry + parsing
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_schedule_parsing_and_canonicalization():
+    assert get_schedule("sync").is_sync
+    assert get_schedule("stale_k").spec == "stale_k:1"
+    assert get_schedule("stale_k:4").k == 4
+    assert get_schedule("double_buffer").double_buffer
+    p = get_schedule("partial:0.8")
+    assert (p.p, p.deterministic) == (0.8, False)
+    assert get_schedule("partial:0.8:det").deterministic
+    combo = get_schedule("stale_k:4+partial:0.5")
+    assert (combo.k, combo.p) == (4, 0.5)
+    assert combo.spec == "stale_k:4+partial:0.5"
+    # degenerate members keep their literal identity (they run the
+    # schedule engine; bitwise-sync is proven below, not aliased)
+    assert not get_schedule("stale_k:0").is_sync
+    assert not get_schedule("partial:1.0").is_sync
+    # Schedule objects pass through
+    s = get_schedule("stale_k:2")
+    assert get_schedule(s) is s
+
+
+@pytest.mark.fast
+def test_schedule_parse_errors_are_actionable():
+    with pytest.raises(ValueError) as e:
+        get_schedule("fedbcd")
+    for name in schedule_names():
+        assert name in str(e.value)
+    for bad, frag in [("sync+partial:0.5", "compose"),
+                      ("double_buffer+stale_k:1", "compose"),
+                      ("partial:0", "0 < p <= 1"),
+                      ("partial:1.5", "0 < p <= 1"),
+                      ("stale_k:-1", "k >= 0"),
+                      ("stale_k:1+stale_k:2", "duplicate"),
+                      ("double_buffer:3", "no arguments"),
+                      ("partial", "participation probability")]:
+        with pytest.raises(ValueError, match=frag):
+            get_schedule(bad)
+
+
+@pytest.mark.fast
+def test_register_custom_schedule():
+    """A registered custom schedule runs end to end through the spec
+    front door; its impl supplies the four round hooks."""
+    class FrozenExchange:
+        """Consumes the round-0 cold-start zeros forever: every round
+        trains exchange-free (a do-nothing schedule, but it exercises
+        the full custom plumbing)."""
+        def __init__(self, n_clients, batch_size, width):
+            import jax.numpy as jnp
+            self._zeros = jnp.zeros((n_clients, batch_size, width),
+                                    jnp.float32)
+
+        def init_state(self, sched):
+            return {}
+
+        def round_start(self, state, lay, key, round_idx):
+            return state, lay.client_mask
+
+        def select(self, state, h_now):
+            return self._zeros, state
+
+        def round_end(self, state):
+            return state
+
+    if "frozen" not in schedule_names():
+        register_schedule(
+            "frozen",
+            lambda n_clients, batch_size, width, args:
+                FrozenExchange(n_clients, batch_size, width))
+    assert "frozen" in schedule_names()
+    rr = build(ExperimentSpec(dataset="titanic", n_clients=2, rounds=1,
+                              epochs=1, seeds=(0,),
+                              schedule="frozen")).run()
+    assert 0.0 <= rr.metrics["f1"] <= 1.0
+    # custom schedules stand alone and are refused in sweep lanes
+    with pytest.raises(ValueError, match="compose"):
+        get_schedule("frozen+partial:0.5")
+    with pytest.raises(ValueError, match="custom"):
+        run_padded_cells("titanic", "devertifl",
+                         SweepConfig(client_counts=(2,), seeds=(0,),
+                                     rounds=1, epochs=1,
+                                     schedules=("frozen",)))
+
+
+@pytest.mark.fast
+def test_lane_impl_buffer_age_semantics():
+    """The ring consumes exactly the stack pushed k steps ago."""
+    impl = LaneScheduleImpl(max_k=3, n_clients=1, batch_size=1, width=1)
+    st = impl.init_state(get_schedule("stale_k:2"))
+    import jax.numpy as jnp
+    consumed = []
+    for t in range(6):
+        h_now = jnp.full((1, 1, 1), float(t + 1))
+        h_ref, st = impl.select(st, h_now)
+        consumed.append(float(h_ref[0, 0, 0]))
+    # cold start: zeros until the ring holds k pushes, then t-2's value
+    assert consumed == [0.0, 0.0, 1.0, 2.0, 3.0, 4.0]
+    # k=0 consumes the current stack even with a deep ring
+    st0 = impl.init_state(get_schedule("stale_k:0"))
+    h_ref, _ = impl.select(st0, jnp.full((1, 1, 1), 7.0))
+    assert float(h_ref[0, 0, 0]) == 7.0
+
+
+# ---------------------------------------------------------------------------
+# spec integration + hash stability
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_sync_spec_hash_unchanged_and_schedule_forks():
+    """The schedule field must not fork pre-existing sync spec ids
+    (pinned against the hash recorded BEFORE the schedule axis
+    existed), while non-sync schedules get their own ids."""
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=2,
+                          epochs=1)
+    assert spec.schedule == "sync"
+    assert spec.spec_hash == "58715f95206928f5"      # pre-PR-5 value
+    assert spec.resume_hash == "48945ac24cd700a7"    # pre-PR-5 value
+    stale = spec.replace(schedule="stale_k:2")
+    assert stale.spec_hash != spec.spec_hash
+    assert stale.resume_hash != spec.resume_hash
+    # canonicalization: formatting cannot fork the hash
+    assert spec.replace(schedule="stale_k").spec_hash == \
+        spec.replace(schedule="stale_k:1").spec_hash
+
+
+@pytest.mark.fast
+def test_spec_schedule_validation():
+    with pytest.raises(ValueError) as e:
+        ExperimentSpec(dataset="titanic", schedule="nope")
+    assert "stale_k" in str(e.value)
+    for mode in ("non_federated", "verticomb", "splitnn"):
+        with pytest.raises(ValueError, match="devertifl"):
+            ExperimentSpec(dataset="titanic", mode=mode,
+                           schedule="stale_k:1")
+    # sync runs everywhere
+    ExperimentSpec(dataset="titanic", mode="verticomb", schedule="sync")
+
+
+# ---------------------------------------------------------------------------
+# sync pins + bitwise degenerate reductions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fl", ["masked", "slice"])
+@pytest.mark.parametrize("sched", ["stale_k:0", "partial:1.0"])
+def test_degenerate_schedules_reduce_to_sync_bitwise(fl, sched):
+    """stale_k:0 and partial:1.0 run the schedule-aware engine yet
+    reproduce the sync trajectory bit for bit in both first-layer
+    families: loss stream, per-round F1, final metrics."""
+    base = ProtocolConfig(first_layer=fl, **TINY)
+    l0, f0, fin0 = _traj(base)
+    l1, f1, fin1 = _traj(base.replace(schedule=sched))
+    np.testing.assert_array_equal(l0, l1)
+    np.testing.assert_array_equal(f0, f1)
+    assert fin0 == fin1
+
+
+def test_degenerate_schedules_reduce_to_sync_padded():
+    """The reduction holds on padded client axes too (dead slots stay
+    exact-zero contributors under the schedule engine)."""
+    base = ProtocolConfig(max_clients=6, **TINY)
+    l0, _, fin0 = _traj(base)
+    for sched in ("stale_k:0", "partial:1.0"):
+        l1, _, fin1 = _traj(base.replace(schedule=sched))
+        np.testing.assert_array_equal(l0, l1)
+        assert fin0 == fin1
+
+
+@pytest.mark.parametrize("sched", ["stale_k:2", "partial:0.8",
+                                   "double_buffer",
+                                   "stale_k:1+partial:0.5"])
+def test_scan_matches_python_engine_under_schedules(sched):
+    """Both engines drive the same schedule hooks: identical loss
+    trajectories and final metrics, bit for bit."""
+    pcfg = ProtocolConfig(schedule=sched, **TINY)
+    l_scan, f_scan, fin_scan = _traj(pcfg, engine="scan")
+    l_py, f_py, fin_py = _traj(pcfg, engine="python")
+    np.testing.assert_array_equal(l_scan, l_py)
+    np.testing.assert_array_equal(f_scan, f_py)
+    assert fin_scan == fin_py
+
+
+def test_cold_start_buffers_match_exchange_free_steps():
+    """Zeros in the ring mean the first k steps train exchange-free:
+    their losses equal the non_federated trajectory's first k steps,
+    and step k diverges once the first real stale stack arrives.
+    The two sides are DIFFERENT compiled programs (the schedule adds
+    an exact-zero exchange term XLA may fuse differently), so the
+    equality bar is ulp-tight allclose, not bitwise."""
+    k = 3
+    stale = _traj(ProtocolConfig(schedule=f"stale_k:{k}", **TINY))[0]
+    nonfed = _traj(ProtocolConfig(mode="non_federated", **TINY))[0]
+    np.testing.assert_allclose(stale[:k], nonfed[:k], rtol=1e-6)
+    assert abs(stale[k] - nonfed[k]) > 1e-4
+    # double_buffer: the WHOLE first round is exchange-free
+    pcfg1 = ProtocolConfig(**{**TINY, "rounds": 1})
+    db = _traj(pcfg1.replace(schedule="double_buffer"))[0]
+    nf = _traj(pcfg1.replace(mode="non_federated"))[0]
+    np.testing.assert_allclose(db, nf, rtol=1e-6)
+
+
+def test_deterministic_partial_full_participation_is_sync():
+    """partial:1.0:det rotates a keep-everyone set: bitwise sync."""
+    base = ProtocolConfig(**TINY)
+    l0, _, fin0 = _traj(base)
+    l1, _, fin1 = _traj(base.replace(schedule="partial:1.0:det"))
+    np.testing.assert_array_equal(l0, l1)
+    assert fin0 == fin1
+    # a real dropout schedule must actually change the trajectory
+    l2, _, _ = _traj(base.replace(schedule="partial:0.5:det"))
+    assert not np.array_equal(l0, l2)
+
+
+# ---------------------------------------------------------------------------
+# degenerate federations
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sched", ["sync", "stale_k:1", "double_buffer",
+                                   "partial:0.5", "partial:0.5:det"])
+def test_single_client_federation_every_schedule(sched):
+    """n_clients=1: no peers to exchange with, every schedule trains
+    finitely (the participation guard keeps the lone client in)."""
+    pcfg = ProtocolConfig(dataset="titanic", n_clients=1, rounds=1,
+                          epochs=1, seed=0, schedule=sched)
+    losses, _, fin = _traj(pcfg)
+    assert np.isfinite(losses).all()
+    assert 0.0 <= fin["f1"] <= 1.0
+
+
+@pytest.mark.parametrize("sched", ["stale_k:1", "double_buffer",
+                                   "partial:0.5"])
+def test_padded_n_real_1_matches_unpadded(sched):
+    """A lone live client on a padded axis trains bit-for-bit like the
+    unpadded single-client run under every schedule (dead slots are
+    exact-zero exchange/FedAvg/participation terms)."""
+    base = ProtocolConfig(dataset="titanic", n_clients=1, rounds=2,
+                          epochs=1, seed=0, schedule=sched)
+    l0, _, fin0 = _traj(base)
+    l1, _, fin1 = _traj(base.replace(max_clients=4))
+    np.testing.assert_array_equal(l0, l1)
+    assert fin0 == fin1
+
+
+def test_padded_schedule_federation_bitwise():
+    """Padding is invisible under non-sync schedules too: n_clients=3
+    padded to 6 trains the live clients bit-for-bit."""
+    for sched in ("stale_k:2", "partial:0.5"):
+        base = ProtocolConfig(schedule=sched, **TINY)
+        l0, _, fin0 = _traj(base)
+        l1, _, fin1 = _traj(base.replace(max_clients=6))
+        np.testing.assert_array_equal(l0, l1)
+        assert fin0 == fin1
+
+
+# ---------------------------------------------------------------------------
+# schedule lanes in the sweep engine
+# ---------------------------------------------------------------------------
+def test_schedule_grid_compiles_once_and_sync_lane_is_exact():
+    """A schedules x counts x seeds batch compiles its round ONCE (k
+    and p are traced per-lane state), its sync lanes equal the
+    sync-only sweep bitwise, and its cells carry schedule-qualified
+    keys."""
+    counts, seeds = (2, 3), (0,)
+    scheds = ("sync", "stale_k:2", "stale_k:2+partial:0.5")
+    out = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=counts, seeds=seeds, rounds=2,
+                    epochs=1, first_layer="masked", schedules=scheds))
+    assert out["round_traces"] == 1, out
+    assert out["lanes"] == len(scheds) * len(counts) * len(seeds)
+    assert set(out["cells"]) == {f"{sc}/{nc}" for sc in scheds
+                                 for nc in counts}
+    ref = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=counts, seeds=seeds, rounds=2,
+                    epochs=1, first_layer="masked"))
+    assert set(ref["cells"]) == set(counts)     # legacy keys untouched
+    for nc in counts:
+        assert out["cells"][f"sync/{nc}"]["f1_per_seed"] == \
+            ref["cells"][nc]["f1_per_seed"]
+        assert out["cells"][f"sync/{nc}"]["final_loss_mean"] == \
+            ref["cells"][nc]["final_loss_mean"]
+
+
+def test_schedule_sweep_rejects_bad_combinations():
+    scfg = SweepConfig(client_counts=(2,), seeds=(0,), rounds=1,
+                       epochs=1)
+    with pytest.raises(ValueError, match="devertifl"):
+        run_padded_cells("titanic", "non_federated",
+                         scfg.__class__(**{**scfg.__dict__,
+                                           "schedules": ("stale_k:1",)}))
+    with pytest.raises(ValueError, match="double_buffer"):
+        run_padded_cells(
+            "titanic", "devertifl",
+            scfg.__class__(**{**scfg.__dict__,
+                              "schedules": ("double_buffer",
+                                            "stale_k:1")}))
+    with pytest.raises(ValueError, match="one schedule"):
+        run_cell("titanic", "devertifl", 2,
+                 scfg.__class__(**{**scfg.__dict__,
+                                   "schedules": ("sync",
+                                                 "stale_k:1")}))
+
+
+def test_double_buffer_single_schedule_sweep():
+    """double_buffer cannot mix with other schedules but sweeps fine
+    as its own batch (its state vmaps like any other carry)."""
+    out = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=(2, 3), seeds=(0,), rounds=1,
+                    epochs=1, schedules=("double_buffer",)))
+    assert out["round_traces"] == 1
+    assert set(out["cells"]) == {"double_buffer/2", "double_buffer/3"}
+
+
+def test_spec_grid_schedule_axis_and_multi_seed_session():
+    """spec_grid grows a schedules axis; run_grid keys non-sync cells
+    as ds/mode/sched/n and stamps spec hashes; a multi-seed session
+    with a schedule runs the run_cell path."""
+    scheds = ("sync", "stale_k:1")
+    specs = spec_grid(datasets=("titanic",), modes=("devertifl",),
+                      client_counts=(2,), seeds=(0,), schedules=scheds,
+                      rounds=1, epochs=1)
+    assert len(specs) == 2
+    grid = run_grid(specs)
+    assert set(grid["cells"]) == {"titanic/devertifl/sync/2",
+                                  "titanic/devertifl/stale_k:1/2"}
+    for cell in grid["cells"].values():
+        assert cell["spec_hash"]
+    rr = build(ExperimentSpec(dataset="titanic", n_clients=2, rounds=1,
+                              epochs=1, seeds=(0, 1),
+                              schedule="stale_k:1")).run()
+    assert len(rr.metrics["f1_per_seed"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume round-trips
+# ---------------------------------------------------------------------------
+def test_schedule_checkpoint_resume_bitwise(tmp_path):
+    """resume() restores the schedule state (stale ring buffers)
+    bitwise: the resumed run equals the uninterrupted one, and a
+    checkpoint written under one schedule refuses to resume under
+    another with an error that names the schedule."""
+    d = str(tmp_path / "ckpt")
+    kw = dict(dataset="titanic", epochs=1, seeds=(0,),
+              schedule="stale_k:2")
+    full = build(ExperimentSpec(rounds=4, **kw)).run()
+    build(ExperimentSpec(rounds=2, checkpoint_dir=d, checkpoint_every=1,
+                         **kw)).run()
+    res = build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                               checkpoint_every=1, **kw)).resume()
+    assert res.resumed_from == 2
+    assert res.metrics == full.metrics
+    for i, r in enumerate((2, 3)):
+        np.testing.assert_array_equal(res.history[i]["round_losses"],
+                                      full.history[r]["round_losses"])
+    # a different schedule (even the same family) is refused actionably
+    with pytest.raises(ValueError, match="different exchange schedule"):
+        build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                             checkpoint_every=1,
+                             **{**kw, "schedule": "stale_k:4"})).resume()
+    with pytest.raises(ValueError, match="different exchange schedule"):
+        build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                             checkpoint_every=1,
+                             **{**kw, "schedule": "sync"})).resume()
+
+
+def test_partial_schedule_checkpoint_resume_bitwise(tmp_path):
+    """The participation stream derives from the round key (fold_in
+    tag), so resume() reproduces the same per-round masks without any
+    carried key material -- resumed == uninterrupted bitwise."""
+    d = str(tmp_path / "ckpt")
+    kw = dict(dataset="titanic", epochs=1, seeds=(0,),
+              schedule="partial:0.5")
+    full = build(ExperimentSpec(rounds=4, **kw)).run()
+    build(ExperimentSpec(rounds=2, checkpoint_dir=d, checkpoint_every=1,
+                         **kw)).run()
+    res = build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                               checkpoint_every=1, **kw)).resume()
+    assert res.metrics == full.metrics
+    for i, r in enumerate((2, 3)):
+        np.testing.assert_array_equal(res.history[i]["round_losses"],
+                                      full.history[r]["round_losses"])
+
+
+# ---------------------------------------------------------------------------
+# the train_federation shim
+# ---------------------------------------------------------------------------
+def test_train_federation_forwards_schedule_and_warns_at_caller():
+    """The deprecation shim forwards schedule= through the spec (same
+    trajectory as the direct engine) and warns with stacklevel=2, so
+    the warning names THIS file, not the shim's."""
+    kw = dict(dataset="titanic", n_clients=2, rounds=1, epochs=1,
+              seed=0, schedule="stale_k:1")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = train_federation(**kw)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert dep and dep[0].filename == __file__
+    legacy = DeVertiFL(ProtocolConfig(**kw)).train()
+    assert out["final"] == legacy["final"]
+    np.testing.assert_array_equal(
+        np.concatenate([h["round_losses"] for h in out["history"]]),
+        np.concatenate([h["round_losses"] for h in legacy["history"]]))
+
+
+# ---------------------------------------------------------------------------
+# benches
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_staleness_bench_smoke_appends(tmp_path):
+    """The staleness bench runs its whole schedule grid on one compile
+    and appends a spec-hash-stamped entry."""
+    import json
+    import os
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, repo)
+    try:
+        from benchmarks import staleness
+    finally:
+        sys.path.remove(repo)
+    path = tmp_path / "BENCH_staleness.json"
+    rows = staleness.run(smoke=True, results_path=str(path))
+    assert any(name.startswith("staleness/") for name, _, _ in rows)
+    data = json.loads(path.read_text())
+    assert isinstance(data, list) and len(data) == 1
+    entry = data[0]
+    assert entry["round_traces"] == 1
+    assert "sync" in entry["grid"]
+    for cell in entry["grid"].values():
+        assert len(cell["spec_hash"]) == 16
