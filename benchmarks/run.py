@@ -29,15 +29,32 @@ def main() -> None:
     args = ap.parse_args()
     which = set((args.only or
                  "figures,table2,kernels,roofline,ablations,protocol,"
-                 "staleness").split(","))
+                 "staleness,analysis").split(","))
     if args.smoke:
         if args.only:
-            ap.error("--smoke runs only the protocol + staleness "
-                     "lanes; drop --only")
-        which = {"protocol", "staleness"}
+            ap.error("--smoke runs only the protocol + staleness + "
+                     "analysis lanes; drop --only")
+        which = {"protocol", "staleness", "analysis"}
 
     rows = []
     t0 = time.time()
+    if "analysis" in which:
+        # static-audit smoke: taint/deadness/retrace over the sync x
+        # slice subset (the full grid is the CI `analysis` lane).  A
+        # violation here is a correctness regression, not a perf one,
+        # so it aborts the bench rather than printing a row quietly.
+        from repro.analysis.audit import audit_combos
+        ta = time.time()
+        report = audit_combos(schedules=("sync",),
+                              first_layers=("slice",),
+                              lane_check=False)
+        if not report.ok:
+            print(report.summary(), file=sys.stderr)
+            sys.exit(1)
+        rows.append(("analysis/audit_smoke",
+                     f"{(time.time()-ta)*1e6:.0f}",
+                     f"combos={len(report.combos)}_traces="
+                     f"{report.static_round_traces}"))
     if "protocol" in which:
         from benchmarks import protocol_bench
         rows += protocol_bench.run(smoke=args.smoke)

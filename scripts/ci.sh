@@ -14,7 +14,10 @@
 # partial rounds, schedule lane sweeps), examples
 # (examples/quickstart.py, examples/federated_training.py --smoke and
 # examples/staleness_sweep.py -- keeps the spec-driven README
-# snippets from rotting).  Full tier-1 is
+# snippets from rotting), analysis (python -m repro.analysis: the
+# static taint/deadness/retrace audit over the full registered
+# mode x schedule x first-layer grid; exits 1 on any unwaived
+# violation).  Full tier-1 is
 # `PYTHONPATH=src python -m pytest -x -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,8 +27,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 LANES=("${@:-all}")
 for lane in "${LANES[@]}"; do
   case "$lane" in
-    all|fast|bench|schedule-smoke|examples) ;;
-    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke examples)" >&2
+    all|fast|bench|schedule-smoke|examples|analysis) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke examples analysis)" >&2
        exit 2 ;;
   esac
 done
@@ -53,6 +56,11 @@ if want schedule-smoke; then
   # benchmarks/run.py --smoke, and test_staleness_bench_smoke_appends
   # covers it here -- no second standalone invocation)
   python -m pytest -q tests/test_schedule.py
+fi
+
+if want analysis; then
+  echo "== python -m repro.analysis (static audit, full grid) =="
+  python -m repro.analysis -q --out /dev/null
 fi
 
 if want examples; then

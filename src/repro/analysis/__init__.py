@@ -1,0 +1,52 @@
+"""repro.analysis -- jaxpr-level static auditing of the protocol.
+
+Traces the round function ONCE with ``jax.make_jaxpr`` (no execution)
+and proves three contracts over the IR (docs/ARCHITECTURE.md section 8
+"Static-analysis contracts" is the authoritative reference):
+
+  taint      privacy flow: client i's raw features reach client j != i
+             only through the declared channels (the first-layer
+             hidden-output exchange and the FedAvg mean), marked in the
+             IR by :mod:`repro.analysis.barrier` tags
+  deadness   dead padded ``client_mask`` slots contribute structural
+             zeros to every tagged exchange / FedAvg / loss term
+  retrace    the round's carried outputs close over their input avals
+             (dtype + weak_type), no captured-scalar drift, and the
+             sweep's lane-stacked round traces identically across
+             client counts x schedules x seeds -- the static side of
+             the ``round_traces == 1`` contract
+
+Entry points:
+
+  audit(spec) -> AnalysisReport          one ExperimentSpec
+  audit_combos(...) -> AnalysisReport    registered mode x schedule x
+                                         first-layer grid
+  python -m repro.analysis               CLI; JSON report; exit 1 on
+                                         any unwaived violation (the
+                                         CI ``analysis`` lane)
+
+Violations can be waived -- justified, in code -- via
+:func:`repro.analysis.report.register_waiver`; see the docs section
+above for when that is (and is not) acceptable.
+
+This module stays import-light: ``repro.core`` imports
+:func:`repro.analysis.barrier.tag` at module load, so the heavy pass
+machinery only loads when an audit actually runs.
+"""
+from repro.analysis.barrier import audit_tracing, auditing, tag  # noqa: F401
+from repro.analysis.report import (AnalysisReport, Finding,  # noqa: F401
+                                   register_waiver)
+
+
+def audit(spec, passes=None, **kw):
+    """Audit one ExperimentSpec (or ProtocolConfig); see
+    :func:`repro.analysis.audit.audit`."""
+    from repro.analysis.audit import audit as _audit
+    return _audit(spec, passes=passes, **kw)
+
+
+def audit_combos(**kw):
+    """Audit the registered mode x schedule x first-layer grid; see
+    :func:`repro.analysis.audit.audit_combos`."""
+    from repro.analysis.audit import audit_combos as _ac
+    return _ac(**kw)

@@ -1,0 +1,85 @@
+"""``python -m repro.analysis`` -- the static-audit CLI (CI lane).
+
+Audits the registered mode x schedule x first-layer grid (or an
+explicit subset), prints the JSON report to stdout (or ``--out``), a
+human summary to stderr, and exits 1 on any unwaived violation.
+
+    python -m repro.analysis                       # full grid
+    python -m repro.analysis --smoke               # 3-combo subset
+    python -m repro.analysis --modes devertifl \
+        --schedules sync stale_k:2 --first-layers slice
+    python -m repro.analysis --passes taint retrace
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.audit import ALL_PASSES, audit_combos
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static privacy/deadness/retrace audit of the "
+                    "traced round function (no execution).")
+    p.add_argument("--modes", nargs="+", default=None,
+                   help="modes to audit (default: every registered "
+                        "federated mode, deduped through aliases)")
+    p.add_argument("--schedules", nargs="+", default=None,
+                   help="schedule specs (default: the shipped "
+                        "sync/stale_k/double_buffer/partial family; "
+                        "non-sync run under devertifl only)")
+    p.add_argument("--first-layers", nargs="+", default=None,
+                   help="first-layer lanes (default: masked slice "
+                        "pallas)")
+    p.add_argument("--passes", nargs="+", default=None,
+                   choices=list(ALL_PASSES),
+                   help="passes to run (default: all)")
+    p.add_argument("--dataset", default="mnist",
+                   help="dataset to trace against (structural "
+                        "contracts are dataset-polymorphic; default "
+                        "mnist)")
+    p.add_argument("--n-clients", type=int, default=3)
+    p.add_argument("--no-lane-check", action="store_true",
+                   help="skip the sweep lane-structural retrace "
+                        "comparison (the slowest single check)")
+    p.add_argument("--smoke", action="store_true",
+                   help="minimal subset: one combo per mode, sync "
+                        "schedule, slice first layer, no lane check")
+    p.add_argument("--out", default=None,
+                   help="write the JSON report here instead of stdout")
+    p.add_argument("-q", "--quiet", action="store_true",
+                   help="suppress the stderr progress/summary")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    kw = dict(modes=args.modes, schedules=args.schedules,
+              first_layers=args.first_layers, passes=args.passes,
+              dataset=args.dataset, n_clients=args.n_clients,
+              lane_check=not args.no_lane_check)
+    if args.smoke:
+        kw["schedules"] = args.schedules or ("sync",)
+        kw["first_layers"] = args.first_layers or ("slice",)
+        kw["lane_check"] = False
+
+    def progress(msg):
+        if not args.quiet:
+            print(msg, file=sys.stderr, flush=True)
+
+    report = audit_combos(progress=progress, **kw)
+    text = report.to_json()
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(text + "\n")
+    else:
+        print(text)
+    if not args.quiet:
+        print(report.summary(), file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

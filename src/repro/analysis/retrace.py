@@ -1,0 +1,175 @@
+"""The retrace-hazard linter (pass 3 of three).
+
+The engine's compile-once contracts (``round_traces == 1``, pinned at
+runtime by tests/test_padded_engine.py and tests/test_schedule.py) fail
+in practice through three statically-detectable hazards:
+
+  carry-aval drift   a round output's aval differs from its input's
+                     (dtype, shape, or weak_type): every round then
+                     presents a new signature and jit retraces.  The
+                     classic source is a captured Python scalar
+                     promoting a carried float32 to weak float.
+  captured scalars   a weak-typed scalar constant baked into the trace
+                     (``0.5`` instead of ``jnp.float32(0.5)``): harmless
+                     until it meets a carried value, then it drifts.
+  lane divergence    the padded sweep vmaps ONE round body over lanes
+                     that differ in client count / schedule / seed; if
+                     the traced body secretly depends on a lane's
+                     static value, the compile-once claim is false even
+                     when a runtime counter on one grid happens to
+                     read 1.
+
+The lane check re-traces single-lane sweep batches that differ ONLY in
+the lane's data (client count 2 vs 3 padded to the same width, seed 0
+vs 1, under sync and under a mixed stale/partial schedule axis) and
+demands bit-identical jaxpr text: values ride constvars/arguments, so
+any textual difference is a structural specialization -- exactly what
+would retrace.  ``static_round_traces == 1`` in the report means all
+three hazards are absent.
+"""
+from __future__ import annotations
+
+import difflib
+import itertools
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.report import Finding
+
+
+def _aval_sig(aval):
+    return (tuple(getattr(aval, "shape", ())),
+            str(getattr(aval, "dtype", "?")),
+            bool(getattr(aval, "weak_type", False)))
+
+
+def _carried_labels(tr):
+    """Labels for the carried leaves, aligned with the jaxpr's carried
+    prefix (params, opt_state, step_idx, sched_state)."""
+    params, opt_state, sched_state, _ = tr.args
+    lab = []
+    for name, tree in (("params", params), ("opt_state", opt_state)):
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+            lab.append(name + jax.tree_util.keystr(path))
+    lab.append("step_idx")
+    for path, _ in jax.tree_util.tree_flatten_with_path(
+            tr.args[2])[0]:
+        lab.append("sched_state" + jax.tree_util.keystr(path))
+    return lab
+
+
+def run_retrace(tr) -> list:
+    """Per-combo checks on a PRODUCTION trace (no audit tags): the
+    carried outputs must close over their input avals, and no captured
+    weak-typed scalar constants may be baked into the round."""
+    findings = []
+    fed = tr.fed
+    step0 = jnp.zeros((), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    jx = jax.make_jaxpr(tr.round_fn)(
+        tr.args[0], tr.args[1], step0, tr.args[2], key,
+        fed._xtr, fed._ytr, fed._lay)
+
+    labels = _carried_labels(tr)
+    n_carried = len(labels)
+    in_avals = [v.aval for v in jx.jaxpr.invars][:n_carried]
+    out_avals = [v.aval for v in jx.jaxpr.outvars][:n_carried]
+    for label, ia, oa in zip(labels, in_avals, out_avals):
+        if _aval_sig(ia) != _aval_sig(oa):
+            findings.append(Finding(
+                "retrace", "carry-aval-drift", tr.combo,
+                f"{label}: round output aval {oa} differs from its "
+                f"input aval {ia}; every round would present a new "
+                "signature and retrace"))
+
+    for cv in jx.jaxpr.constvars:
+        av = cv.aval
+        if getattr(av, "weak_type", False) and \
+                getattr(av, "shape", None) == ():
+            findings.append(Finding(
+                "retrace", "captured-weak-scalar", tr.combo,
+                f"weak-typed scalar constant {av} captured in the "
+                "round trace; promote it explicitly (jnp.asarray with "
+                "a dtype) before it meets a carried value"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# lane-structural equality (the sweep's compile-once claim)
+# ---------------------------------------------------------------------------
+_ADDR_RE = re.compile(r"0x[0-9a-f]+")
+
+
+def _normalize(text: str) -> str:
+    """Erase memory addresses (function-object params like
+    ``jvp_jaxpr_thunk=<function ... at 0x...>``) so only structural
+    differences survive the comparison."""
+    return _ADDR_RE.sub("0x", text)
+
+
+def _lane_jaxpr(dataset, counts, schedules, seeds, max_clients, width):
+    """Trace one single-config sweep lane batch (un-jitted, vmapped
+    round) with the batch-wide padding/width statics pinned, so
+    batches that should share a compile produce comparable jaxprs."""
+    from repro.core.sweep import SweepConfig, build_lane_batch
+    scfg = SweepConfig(
+        datasets=(dataset,), modes=("devertifl",),
+        client_counts=counts, seeds=seeds, rounds=1, epochs=1,
+        batch_size=16, n_samples=32, first_layer="slice",
+        schedules=schedules)
+    lb = build_lane_batch(dataset, "devertifl", scfg,
+                          max_clients=max_clients, width=width)
+    step_idx = jnp.zeros((lb.n_lanes,), jnp.int32)
+    return jax.make_jaxpr(jax.vmap(lb.round_fn))(
+        lb.params, lb.opt_state, step_idx, lb.sched_state,
+        lb.loop_keys, lb.xtr, lb.ytr, lb.lay)
+
+
+def run_lane_check(dataset: str = "mnist") -> list:
+    """Prove the padded sweep's round body is lane-polymorphic: trace
+    lane batches differing only in client count / seed / schedule
+    values (same padded max, same gather width, same lane count) and
+    require bit-identical jaxpr text."""
+    findings = []
+    cases = [
+        ("client-count (sync)",
+         dict(counts=(2,), schedules=("sync",), seeds=(0,)),
+         dict(counts=(3,), schedules=("sync",), seeds=(0,))),
+        ("seed (sync)",
+         dict(counts=(2,), schedules=("sync",), seeds=(0,)),
+         dict(counts=(2,), schedules=("sync",), seeds=(1,))),
+        ("client-count (stale_k+partial lanes)",
+         dict(counts=(2,), schedules=("stale_k:1", "partial:0.5"),
+              seeds=(0,)),
+         dict(counts=(3,), schedules=("stale_k:1", "partial:0.5"),
+              seeds=(0,))),
+    ]
+    # batch-wide statics shared by every compared trace: padded client
+    # axis 3, gather width of the 2-client split (the widest involved)
+    max_c, width = 3, None
+    from repro.configs import get_config
+    from repro.core import partition as PT
+    from repro.core.protocol import arch_for
+    from repro.models.mlp_model import PaperMLP
+    n_feat = PaperMLP(get_config(arch_for(dataset))).in_features
+    width = max(max(PT.make_layout(dataset, n_feat, nc, seed=s,
+                                   max_clients=max_c).sizes)
+                for nc, s in itertools.product((2, 3), (0, 1)))
+    for name, kw_a, kw_b in cases:
+        ja = _lane_jaxpr(dataset, max_clients=max_c, width=width, **kw_a)
+        jb = _lane_jaxpr(dataset, max_clients=max_c, width=width, **kw_b)
+        ta, tb = _normalize(str(ja.jaxpr)), _normalize(str(jb.jaxpr))
+        if ta != tb:
+            diff = list(itertools.islice(
+                (ln for ln in difflib.unified_diff(
+                    ta.splitlines(), tb.splitlines(), lineterm="")
+                 if ln.startswith(("+", "-"))), 12))
+            findings.append(Finding(
+                "retrace", "lane-retrace-divergence",
+                f"devertifl/sweep/{dataset}",
+                f"sweep lane batches differing only in {name} trace "
+                "to different round bodies; the padded batch would "
+                "retrace per lane value", chain=tuple(diff)))
+    return findings

@@ -27,6 +27,7 @@ remain as thin internals underneath; spec-driven runs reproduce them
 bit-for-bit (tests/test_api.py).  Contracts: docs/ARCHITECTURE.md
 ("Spec & registry contracts").
 """
+from repro.analysis import AnalysisReport, audit  # noqa: F401
 from repro.api.spec import ExperimentSpec, HASH_EXCLUDE  # noqa: F401
 from repro.api.modes import (  # noqa: F401
     ModeEntry, get_mode, mode_names, register_mode,

@@ -21,6 +21,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# identity outside an audit trace; marks the declared cross-client
+# channels / maskable terms for the static auditor (repro.analysis)
+from repro.analysis.barrier import tag
+
 
 def hidden_output_exchange(h_all, differentiable=False, client_mask=None):
     """h_all: [n_clients, B, H] per-client hidden outputs.
@@ -39,8 +43,10 @@ def hidden_output_exchange(h_all, differentiable=False, client_mask=None):
     loss/metric downstream.
     """
     hm = h_all if client_mask is None else \
-        h_all * client_mask[:, None, None]
-    total = hm.sum(axis=0, keepdims=True)           # [1, B, H]
+        tag(h_all * client_mask[:, None, None], "term", "exchange",
+            client_axis=0)
+    total = tag(hm.sum(axis=0, keepdims=True),      # [1, B, H]
+                "declass", "exchange")
     if differentiable:
         return jnp.broadcast_to(total, h_all.shape)
     peers = jax.lax.stop_gradient(total - hm)       # const contribution
@@ -66,8 +72,10 @@ def scheduled_exchange(h_all, h_ref, eff_mask):
     differentiable=False)`` -- bit-for-bit, which is how the
     degenerate schedules (stale_k:0, partial:1.0) reduce to sync
     (tests/test_schedule.py)."""
-    hm = h_ref * eff_mask[:, None, None]
-    total = hm.sum(axis=0, keepdims=True)           # [1, B, H]
+    hm = tag(h_ref * eff_mask[:, None, None], "term", "exchange",
+             client_axis=0)
+    total = tag(hm.sum(axis=0, keepdims=True),      # [1, B, H]
+                "declass", "exchange")
     return h_all + (total - hm)
 
 
@@ -85,13 +93,16 @@ def fedavg(stacked_params, client_mask=None):
     ``leaf.mean(axis=0)`` bit for bit."""
     if client_mask is None:
         def avg(leaf):
-            m = leaf.mean(axis=0, keepdims=True)
+            m = tag(leaf.mean(axis=0, keepdims=True),
+                    "declass", "fedavg")
             return jnp.broadcast_to(m, leaf.shape)
     else:
         inv_live = 1.0 / client_mask.sum()
 
         def avg(leaf):
             cm = client_mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
-            m = (leaf * cm).sum(axis=0, keepdims=True) * inv_live
+            term = tag(leaf * cm, "term", "fedavg", client_axis=0)
+            m = tag(term.sum(axis=0, keepdims=True) * inv_live,
+                    "declass", "fedavg")
             return jnp.broadcast_to(m, leaf.shape)
     return jax.tree.map(avg, stacked_params)

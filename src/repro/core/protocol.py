@@ -96,6 +96,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.barrier import tag
 from repro.configs import get_config
 from repro.core import partition as PT
 from repro.core.exchange import fedavg, hidden_output_exchange
@@ -274,13 +275,16 @@ def _masked_mean(values, client_mask):
     sum * (1/n), so this is bit-for-bit ``values[:n_live].mean()`` when
     the dead tail is masked to exact zeros -- a traced divide would
     differ in the last ulp."""
-    return (values * client_mask).sum() * (1.0 / client_mask.sum())
+    term = tag(values * client_mask, "term", "loss", client_axis=0)
+    return term.sum() * (1.0 / client_mask.sum())
 
 
 def _masked_hidden_sum(h_all, client_mask):
     """[n, B, H] -> [B, H] exchange sum excluding dead clients (their
     terms are exact +0.0, preserving the unpadded reduction bits)."""
-    return (h_all * client_mask[:, None, None]).sum(0)
+    hm = tag(h_all * client_mask[:, None, None], "term", "exchange",
+             client_axis=0)
+    return tag(hm.sum(0), "declass", "exchange")
 
 
 def make_first_layer_fn(model, pcfg, layout, interpret=None):

@@ -66,7 +66,7 @@ from __future__ import annotations
 import itertools
 import time
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -238,12 +238,14 @@ def _stacked_federations(dataset, n_clients, seeds, n_samples):
     return xtr, ytr, xte, yte, lay, keys, layouts[0]
 
 
-def _stacked_lanes(dataset, client_counts, seeds, n_samples):
+def _stacked_lanes(dataset, client_counts, seeds, n_samples,
+                   max_clients=None):
     """Stack every (n_clients, seed) pair on one lane axis, padded to
-    max(client_counts).  Returns (xtr, ytr, xte, yte, lay, keys,
-    lanes, width): lanes is the [(n_clients, seed), ...] order
-    (count-major), width the max live slice length."""
-    max_c = max(client_counts)
+    max(client_counts) (or an explicit wider ``max_clients``).
+    Returns (xtr, ytr, xte, yte, lay, keys, lanes, width): lanes is
+    the [(n_clients, seed), ...] order (count-major), width the max
+    live slice length."""
+    max_c = max_clients or max(client_counts)
     xtr, ytr, xte, yte = DR.make_dataset_stack(dataset, seeds, n=n_samples)
     xs_tr, xs_te, lays, lanes, width = [], [], [], [], 1
     for nc in client_counts:
@@ -410,32 +412,53 @@ def _coerce_sweep_config(dataset, mode, scfg):
     return ds, internal, cfg
 
 
-def run_padded_cells(dataset, mode, scfg, shard="auto"):
-    """Train the FULL schedules x client_counts x seeds lane batch of
-    one (dataset, mode) pair under a single compiled round function,
-    distributing lanes over the device mesh.  ``scfg`` is a
-    SweepConfig, or a sequence of ``repro.api.ExperimentSpec`` sharing
-    one (dataset, mode) whose n_clients / schedule values form the
-    count and schedule axes.
+class LaneBatch(NamedTuple):
+    """One fully-assembled sweep lane batch: the vmappable round and
+    every per-lane tensor it consumes.  ``build_lane_batch`` is the
+    single assembly path shared by :func:`run_padded_cells` (which
+    trains it) and the static auditor's retrace pass
+    (``repro.analysis.retrace``, which re-traces sub-batches and
+    compares jaxprs -- the static side of the compile-once claim)."""
+    pcfg: ProtocolConfig
+    model: object
+    opt: object
+    round_fn: object            # un-jitted, per-lane; vmap to train
+    first: object               # shape-uniform first layer (or None)
+    params: object
+    opt_state: object
+    sched_state: object
+    loop_keys: object
+    xtr: object
+    ytr: object
+    xte: object
+    yte: object
+    lay: object
+    lanes: tuple                # [(n_clients, seed), ...] sched-major
+    scheds: tuple
+    sync_only: bool
+    n_train: int
+    n_base: int                 # lanes per schedule (count x seed)
+    width: int
 
-    Returns {"cells": {key: cell_dict}, "round_traces": int,
-    "lanes": int, "devices": int, "wall_s": float, "cells_per_sec":
-    float, "steps_per_sec": float}.  For the default sync-only
-    schedule axis the cell keys stay the historical bare ``n_clients``
-    ints; a non-default schedule axis keys cells as
-    ``"{schedule}/{n_clients}"`` (e.g. ``"stale_k:2/3"``).  Each
-    cell_dict has the run_cell schema plus a ``"schedule"`` field --
-    except that wall_s is the SHARED batch wall and each cell's
-    steps_per_sec is its lanes' share of it (cells sum to the batch's
-    steps_per_sec).  round_traces counts actual retraces of the round
-    body -- 1 means the whole multi-count (and multi-schedule: k and
-    p are traced per-lane state) batch ran on one compile (pinned in
-    tests).
-    shard: "auto" (largest dividing device count) | False | int.
-    """
-    dataset, mode, scfg = _coerce_sweep_config(dataset, mode, scfg)
+    @property
+    def n_lanes(self) -> int:
+        return len(self.lanes)
+
+
+def build_lane_batch(dataset, mode, scfg: SweepConfig,
+                     max_clients=None, width=None) -> LaneBatch:
+    """Assemble the schedules x client_counts x seeds lane batch of one
+    (dataset, mode) pair: stacked data/layouts/keys, per-count padded
+    inits, schedule-major tiling, and the single un-jitted round
+    function every lane shares.  ``max_clients`` widens the padded
+    client axis beyond max(client_counts) and ``width`` widens the
+    gather-slice first layer -- the auditor pins both so sub-batches
+    that must share a compile stay shape-identical."""
     counts = tuple(scfg.client_counts)
-    max_c = max(counts)
+    max_c = max_clients or max(counts)
+    if max_c < max(counts):
+        raise ValueError(f"max_clients={max_c} < max client count "
+                         f"{max(counts)}")
     # n_clients=min(counts) keeps ProtocolConfig's padded/unpadded
     # distinction truthful (lanes carry n_real in [min, max]), so
     # make_round_fn's mask-blind-aggregator guard stays armed whenever
@@ -449,8 +472,10 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
-    xtr, ytr, xte, yte, lay, keys, base_lanes, width = _stacked_lanes(
-        dataset, counts, scfg.seeds, scfg.n_samples)
+    xtr, ytr, xte, yte, lay, keys, base_lanes, data_width = \
+        _stacked_lanes(dataset, counts, scfg.seeds, scfg.n_samples,
+                       max_clients=max_c)
+    width = max(width or 0, data_width)
     n_base, n_train = xtr.shape[0], xtr.shape[1]
     first = _sweep_first_layer(pcfg, width)
     scheds, impl, sync_only = _sweep_schedules(scfg, mode, model,
@@ -486,11 +511,51 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
         params = jax.tree.map(tile, params)
         opt_state = jax.tree.map(tile, opt_state)
     sched_state = _stacked_sched_state(impl, scheds, n_base)
-    lanes = [(nc, s) for _ in scheds for (nc, s) in base_lanes]
-    n_lanes = n_base * n_sched
+    lanes = tuple((nc, s) for _ in scheds for (nc, s) in base_lanes)
 
     round_fn = make_round_fn(model, opt, pcfg, n_train,
                              first_layer_fn=first, sched_impl=impl)
+    return LaneBatch(pcfg=pcfg, model=model, opt=opt,
+                     round_fn=round_fn, first=first, params=params,
+                     opt_state=opt_state, sched_state=sched_state,
+                     loop_keys=loop_keys, xtr=xtr, ytr=ytr, xte=xte,
+                     yte=yte, lay=lay, lanes=lanes, scheds=scheds,
+                     sync_only=sync_only, n_train=n_train,
+                     n_base=n_base, width=width)
+
+
+def run_padded_cells(dataset, mode, scfg, shard="auto"):
+    """Train the FULL schedules x client_counts x seeds lane batch of
+    one (dataset, mode) pair under a single compiled round function,
+    distributing lanes over the device mesh.  ``scfg`` is a
+    SweepConfig, or a sequence of ``repro.api.ExperimentSpec`` sharing
+    one (dataset, mode) whose n_clients / schedule values form the
+    count and schedule axes.
+
+    Returns {"cells": {key: cell_dict}, "round_traces": int,
+    "lanes": int, "devices": int, "wall_s": float, "cells_per_sec":
+    float, "steps_per_sec": float}.  For the default sync-only
+    schedule axis the cell keys stay the historical bare ``n_clients``
+    ints; a non-default schedule axis keys cells as
+    ``"{schedule}/{n_clients}"`` (e.g. ``"stale_k:2/3"``).  Each
+    cell_dict has the run_cell schema plus a ``"schedule"`` field --
+    except that wall_s is the SHARED batch wall and each cell's
+    steps_per_sec is its lanes' share of it (cells sum to the batch's
+    steps_per_sec).  round_traces counts actual retraces of the round
+    body -- 1 means the whole multi-count (and multi-schedule: k and
+    p are traced per-lane state) batch ran on one compile (pinned in
+    tests; ``repro.analysis``'s retrace pass proves the static side).
+    shard: "auto" (largest dividing device count) | False | int.
+    """
+    dataset, mode, scfg = _coerce_sweep_config(dataset, mode, scfg)
+    lb = build_lane_batch(dataset, mode, scfg)
+    pcfg, scheds, counts = lb.pcfg, lb.scheds, tuple(scfg.client_counts)
+    n_base, n_train, n_lanes = lb.n_base, lb.n_train, lb.n_lanes
+    params, opt_state, sched_state = (lb.params, lb.opt_state,
+                                      lb.sched_state)
+    loop_keys, xtr, ytr, xte, yte, lay = (lb.loop_keys, lb.xtr, lb.ytr,
+                                          lb.xte, lb.yte, lb.lay)
+    round_fn, lanes, sync_only = lb.round_fn, lb.lanes, lb.sync_only
     traces = 0
 
     def counted_round(*args):
@@ -508,7 +573,7 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
                            out_specs=spec, check_vma=False)
     vround = jax.jit(vround, donate_argnums=(0, 1))
     vpred = jax.jit(jax.vmap(
-        make_predict_fn(model, pcfg, first_layer_fn=first)))
+        make_predict_fn(lb.model, pcfg, first_layer_fn=lb.first)))
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
     params, opt_state, losses, wall, timed_rounds = _train_rounds(

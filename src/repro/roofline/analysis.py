@@ -25,13 +25,9 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
+from repro.analysis.ir import SHAPE_RE as _SHAPE_RE
+from repro.analysis.ir import shape_bytes as _shape_bytes
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
 
 # e.g.  %all-reduce.5 = bf16[8,128,3584] all-reduce(...), replica_groups=...
 _COLL_RE = re.compile(
@@ -44,15 +40,6 @@ _TUPLE_COLL_RE = re.compile(
     r"(?:-start)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-
-
-def _shape_bytes(dtype: str, dims: str) -> int:
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
 
 
 def _group_size(line: str) -> int:

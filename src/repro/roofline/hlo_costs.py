@@ -21,14 +21,11 @@ import re
 from collections import defaultdict
 from dataclasses import dataclass, field
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1,
-    "f8e5m2": 1,
-}
+from repro.analysis.ir import SHAPE_RE as _SHAPE_RE
+from repro.analysis.ir import bytes_of as _bytes_of
+from repro.analysis.ir import parse_shapes as _parse_shapes
+from repro.analysis.ir import shape_elems as _shape_elems
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
 _OP_RE = re.compile(r"^\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
@@ -41,21 +38,6 @@ _CALLS_RE = re.compile(r"(?:to_apply|body|condition|calls)=%?([\w.\-]+)")
 # fedavg_every-style sync branch actually runs 1/E of steps -- callers
 # that know the duty cycle can subtract, see launch/dryrun.py)
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
-
-
-def _parse_shapes(type_str):
-    return [(dt, dims) for dt, dims in _SHAPE_RE.findall(type_str)]
-
-
-def _bytes_of(type_str):
-    total = 0
-    for dt, dims in _parse_shapes(type_str):
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES.get(dt, 4)
-    return total
 
 
 @dataclass
@@ -119,13 +101,8 @@ def split_computations(txt: str):
 
 def _dot_flops(instr: Instr, comp: Computation):
     """2 * prod(out dims) * prod(contracted dims of lhs)."""
-    out_elems = 0
-    for dt, dims in _parse_shapes(instr.type_str):
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        out_elems += n
+    out_elems = sum(_shape_elems(dims)
+                    for _, dims in _parse_shapes(instr.type_str))
     m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
     if not m or not instr.operands:
         return 2 * out_elems  # fallback
