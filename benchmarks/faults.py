@@ -1,0 +1,146 @@
+"""Fault tolerance: how much accuracy De-VertiFL's knowledge exchange
+gives up as clients fail-stop (crash), lag (straggle), and ship
+corrupted payloads the exchange guard must quarantine -- and whether
+the Session divergence watchdog actually recovers a poisoned run.
+
+Two sections per entry:
+
+grid      the fault-rate x schedule grid runs as ONE padded lane batch
+          through ``repro.core.sweep.run_padded_cells``: rates,
+          durations and corruption kind are traced per-lane state, so
+          every cell shares a single compiled round
+          (``round_traces == 1`` is recorded).  Each cell carries its
+          guard telemetry (crash / straggle / corruption / quarantine
+          client-round counts) and the ``spec_hash`` of the
+          ExperimentSpec it corresponds to.
+recovery  one Session.run under a hot fault plan with the divergence
+          watchdog armed (an explicit RetryPolicy), recording the
+          ``timings["fault"]`` counters -- watchdog trips, reseeded
+          retries, and the guard totals -- end to end.
+
+Results append to ``benchmarks/results/BENCH_faults.json`` (same
+append-only rules as BENCH_protocol.json), one dated git-SHA-keyed
+entry per run.
+
+Run:    PYTHONPATH=src python -m benchmarks.faults
+Smoke:  PYTHONPATH=src python -m benchmarks.faults --smoke
+        (toy sizes, no result-file write; the scripts/ci.sh
+        fault-smoke lane runs this)
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+
+import jax
+
+from benchmarks.protocol_bench import RESULTS, _append_entry
+from repro.api import ExperimentSpec, build, git_sha, spec_grid
+from repro.core.sweep import run_padded_cells
+from repro.faults import RetryPolicy
+
+FULL = dict(dataset="mnist", n_clients=3, seeds=(0, 1), rounds=3,
+            epochs=2, n_samples=2000,
+            crash_rates=(0.0, 0.1, 0.2, 0.4),
+            corrupt_rates=(0.0, 0.05, 0.2),
+            schedules=("sync", "stale_k:2"))
+SMOKE = dict(dataset="mnist", n_clients=3, seeds=(0,), rounds=1,
+             epochs=1, n_samples=512,
+             crash_rates=(0.0, 0.2), corrupt_rates=(0.0, 0.2),
+             schedules=("sync", "stale_k:2"))
+
+
+def fault_name(crash: float, corrupt: float) -> str:
+    """The canonical fault string of one (crash rate, corrupt rate)
+    grid cell ("none" for the fault-free corner)."""
+    parts = []
+    if crash > 0:
+        parts.append(f"crash:{crash:g}:2")
+    if corrupt > 0:
+        parts.append(f"corrupt:{corrupt:g}")
+    return "+".join(parts) or "none"
+
+
+def run(smoke=False, results_path=None):
+    """Sweep fault-rate x schedule, run the recovery probe, append the
+    entry, return bench CSV rows.  smoke=True shrinks to toy sizes and
+    (unless results_path is given) skips the file write."""
+    cfg = SMOKE if smoke else FULL
+    faults = tuple(fault_name(cr, co) for cr in cfg["crash_rates"]
+                   for co in cfg["corrupt_rates"])
+    specs = spec_grid(
+        datasets=(cfg["dataset"],), modes=("devertifl",),
+        client_counts=(cfg["n_clients"],), seeds=cfg["seeds"],
+        schedules=cfg["schedules"], faults=faults,
+        rounds=cfg["rounds"], epochs=cfg["epochs"],
+        n_samples=cfg["n_samples"])
+    out = run_padded_cells(cfg["dataset"], "devertifl", specs)
+
+    grid, rows = {}, []
+    none_f1 = None
+    for spec in specs:
+        key = f"{spec.fault}/{spec.schedule}/{spec.n_clients}"
+        cell = out["cells"][key]
+        grid[f"{spec.fault}/{spec.schedule}"] = {
+            "f1_mean": cell["f1_mean"], "f1_std": cell["f1_std"],
+            "acc_mean": cell["acc_mean"],
+            "final_loss_mean": cell["final_loss_mean"],
+            "fault_telemetry": cell["fault_telemetry"],
+            "spec_hash": spec.spec_hash,
+        }
+        if spec.fault == "none" and spec.schedule == "sync":
+            none_f1 = cell["f1_mean"]
+        rows.append((f"faults/{spec.fault}/{spec.schedule}", 0.0,
+                     f"f1={cell['f1_mean']:.3f}"))
+
+    # recovery probe: a hot composite plan under the armed watchdog --
+    # the interesting numbers are the telemetry counters, not f1
+    rspec = ExperimentSpec(
+        dataset=cfg["dataset"], mode="devertifl",
+        n_clients=cfg["n_clients"], seeds=(0,), rounds=cfg["rounds"],
+        epochs=cfg["epochs"], n_samples=cfg["n_samples"],
+        fault="crash:0.2:2+straggle:0.5:2+corrupt:0.2", eval_every=0)
+    rres = build(rspec).run(retry=RetryPolicy(max_retries=2))
+    recovery = {
+        "spec_hash": rspec.spec_hash, "fault": rspec.fault,
+        "f1_mean": rres.metrics["f1"],
+        "fault_telemetry": rres.timings["fault"],
+    }
+    rows.append(("faults/recovery", rres.timings["wall_s"],
+                 f"trips={rres.timings['fault']['watchdog_trips']} "
+                 f"retries={rres.timings['fault']['retries']}"))
+
+    entry = {
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "config": {k: v for k, v in cfg.items()},
+        "round_traces": out["round_traces"],
+        "lanes": out["lanes"],
+        "devices": out["devices"],
+        # the trajectory: accuracy as a function of crash/corrupt rate
+        # and schedule, fault-free sync as the reference corner
+        "none_f1": none_f1,
+        "grid": grid,
+        "recovery": recovery,
+    }
+    if results_path is None and not smoke:
+        os.makedirs(RESULTS, exist_ok=True)
+        results_path = os.path.join(RESULTS, "BENCH_faults.json")
+    if results_path is not None:
+        _append_entry(entry, results_path)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Fault-tolerance sweep + recovery probe (appends "
+                    "to BENCH_faults.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, no result-file write")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
+        print(",".join(str(x) for x in r))

@@ -17,24 +17,26 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast perf-regression canary (~1 min): runs ONLY "
                          "the protocol lane (engine + schedule + sweep "
-                         "throughput) and the staleness schedule sweep at "
-                         "toy sizes and skips the figures, table2, "
-                         "kernels, roofline, and ablations lanes; nothing "
-                         "is written to benchmarks/results/. Paired with "
-                         "the 'fast' pytest marker in scripts/ci.sh.")
+                         "throughput), the staleness schedule sweep, and "
+                         "the fault-tolerance sweep at toy sizes and "
+                         "skips the figures, table2, kernels, roofline, "
+                         "and ablations lanes; nothing is written to "
+                         "benchmarks/results/. Paired with the 'fast' "
+                         "pytest marker in scripts/ci.sh.")
     ap.add_argument("--only", default=None,
                     help="comma list of lanes to run: figures,table2,"
-                         "kernels,roofline,ablations,protocol,staleness "
-                         "(default: all; incompatible with --smoke)")
+                         "kernels,roofline,ablations,protocol,staleness,"
+                         "faults (default: all; incompatible with "
+                         "--smoke)")
     args = ap.parse_args()
     which = set((args.only or
                  "figures,table2,kernels,roofline,ablations,protocol,"
-                 "staleness,analysis").split(","))
+                 "staleness,faults,analysis").split(","))
     if args.smoke:
         if args.only:
             ap.error("--smoke runs only the protocol + staleness + "
-                     "analysis lanes; drop --only")
-        which = {"protocol", "staleness", "analysis"}
+                     "faults + analysis lanes; drop --only")
+        which = {"protocol", "staleness", "faults", "analysis"}
 
     rows = []
     t0 = time.time()
@@ -61,6 +63,9 @@ def main() -> None:
     if "staleness" in which:
         from benchmarks import staleness
         rows += staleness.run(smoke=args.smoke)
+    if "faults" in which:
+        from benchmarks import faults
+        rows += faults.run(smoke=args.smoke)
     if "kernels" in which:
         from benchmarks import kernels_bench
         rows += kernels_bench.run()

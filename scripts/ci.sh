@@ -5,18 +5,23 @@
 #   scripts/ci.sh fast bench      # `fast` pytest marker + bench smoke
 #   scripts/ci.sh examples        # examples smoke (reduced configs)
 #   scripts/ci.sh schedule-smoke  # exchange-schedule suite + bench
+#   scripts/ci.sh fault-smoke     # fault-injection suite + bench + audit
 #
 # Lanes: fast (the `fast` pytest marker suite), bench
 # (benchmarks/run.py --smoke: protocol engine + schedule + sweep
-# throughput and the staleness sweep at toy sizes, no result-file
-# writes), schedule-smoke (tests/test_schedule.py -- the
+# throughput and the staleness + fault sweeps at toy sizes, no
+# result-file writes), schedule-smoke (tests/test_schedule.py -- the
 # repro.schedule subsystem: sync bitwise pins, stale/double-buffer/
-# partial rounds, schedule lane sweeps), examples
+# partial rounds, schedule lane sweeps), fault-smoke
+# (tests/test_faults.py -- the repro.faults subsystem: fault="none"
+# bitwise pins, crash/straggle/corrupt determinism, guard quarantine,
+# rollback-retry recovery -- plus the faults bench smoke and a static
+# audit over a faulted combo subset), examples
 # (examples/quickstart.py, examples/federated_training.py --smoke and
 # examples/staleness_sweep.py -- keeps the spec-driven README
 # snippets from rotting), analysis (python -m repro.analysis: the
 # static taint/deadness/retrace audit over the full registered
-# mode x schedule x first-layer grid; exits 1 on any unwaived
+# mode x schedule x first-layer x fault grid; exits 1 on any unwaived
 # violation).  Full tier-1 is
 # `PYTHONPATH=src python -m pytest -x -q`.
 set -euo pipefail
@@ -27,8 +32,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 LANES=("${@:-all}")
 for lane in "${LANES[@]}"; do
   case "$lane" in
-    all|fast|bench|schedule-smoke|examples|analysis) ;;
-    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke examples analysis)" >&2
+    all|fast|bench|schedule-smoke|fault-smoke|examples|analysis) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke examples analysis)" >&2
        exit 2 ;;
   esac
 done
@@ -56,6 +61,18 @@ if want schedule-smoke; then
   # benchmarks/run.py --smoke, and test_staleness_bench_smoke_appends
   # covers it here -- no second standalone invocation)
   python -m pytest -q tests/test_schedule.py
+fi
+
+if want fault-smoke; then
+  echo "== tests/test_faults.py (fault-injection suite) =="
+  python -m pytest -q tests/test_faults.py
+  echo "== benchmarks/faults.py --smoke =="
+  python -m benchmarks.faults --smoke
+  echo "== repro.analysis (faulted combo subset) =="
+  python -m repro.analysis -q --out /dev/null --modes devertifl \
+    --schedules sync stale_k:2 --first-layers slice \
+    --faults none "crash:0.2:2+corrupt:0.05" "straggle:0.5:2" \
+    --no-lane-check
 fi
 
 if want analysis; then

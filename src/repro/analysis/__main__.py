@@ -33,6 +33,10 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--first-layers", nargs="+", default=None,
                    help="first-layer lanes (default: masked slice "
                         "pallas)")
+    p.add_argument("--faults", nargs="+", default=None,
+                   help="fault plan specs (default: none plus a "
+                        "crash+straggle+corrupt composite; non-none "
+                        "plans run under devertifl only)")
     p.add_argument("--passes", nargs="+", default=None,
                    choices=list(ALL_PASSES),
                    help="passes to run (default: all)")
@@ -57,12 +61,14 @@ def build_parser() -> argparse.ArgumentParser:
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     kw = dict(modes=args.modes, schedules=args.schedules,
-              first_layers=args.first_layers, passes=args.passes,
-              dataset=args.dataset, n_clients=args.n_clients,
+              first_layers=args.first_layers, faults=args.faults,
+              passes=args.passes, dataset=args.dataset,
+              n_clients=args.n_clients,
               lane_check=not args.no_lane_check)
     if args.smoke:
         kw["schedules"] = args.schedules or ("sync",)
         kw["first_layers"] = args.first_layers or ("slice",)
+        kw["faults"] = args.faults or ("none",)
         kw["lane_check"] = False
 
     def progress(msg):

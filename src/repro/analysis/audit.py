@@ -55,7 +55,9 @@ def _as_pcfg(spec) -> ProtocolConfig:
 
 
 def combo_name(pcfg: ProtocolConfig) -> str:
-    return f"{pcfg.mode}/{pcfg.schedule}/{resolve_first_layer(pcfg)}"
+    name = f"{pcfg.mode}/{pcfg.schedule}/{resolve_first_layer(pcfg)}"
+    fault = getattr(pcfg, "fault", "none")
+    return name if fault == "none" else f"{name}/{fault}"
 
 
 # ---------------------------------------------------------------------------
@@ -224,12 +226,17 @@ def _stamp_traces(report: AnalysisReport):
     report.static_round_traces = 0 if bad else 1
 
 
-def default_combos(modes=None, schedules=None, first_layers=None):
-    """The registered mode x schedule x first-layer grid the CI lane
-    audits: every federated mode (deduped through registry aliases),
-    the shipped schedule families (non-sync schedules are
-    devertifl-only by engine contract), and the three built-in
-    first-layer lanes ("auto" dedupes to its backend resolution)."""
+def default_combos(modes=None, schedules=None, first_layers=None,
+                   faults=None):
+    """The registered mode x schedule x first-layer x fault grid the
+    CI lane audits: every federated mode (deduped through registry
+    aliases), the shipped schedule families, the three built-in
+    first-layer lanes ("auto" dedupes to its backend resolution), and
+    -- for devertifl, the only mode faults inject into -- a composite
+    fault plan exercising all three fault kinds plus the guard.  The
+    fault axis multiplies schedules, not first layers (injection and
+    guard sit in the exchange, which is first-layer-agnostic), to keep
+    the grid small."""
     from repro.api.modes import MODES, get_mode
     if modes is None:
         seen = {}
@@ -243,9 +250,12 @@ def default_combos(modes=None, schedules=None, first_layers=None):
                      "partial:0.5:det", "stale_k:1+partial:0.5")
     if first_layers is None:
         first_layers = ("masked", "slice", "pallas")
+    if faults is None:
+        faults = ("none", "crash:0.2:2+straggle:0.5:2+corrupt:0.05")
     combos = []
     for mode in modes:
         scheds = schedules if mode == "devertifl" else ("sync",)
+        fts = faults if mode == "devertifl" else ("none",)
         fls, seen_fl = [], set()
         for fl in first_layers:
             r = resolve_first_layer(ProtocolConfig(mode=mode,
@@ -253,24 +263,29 @@ def default_combos(modes=None, schedules=None, first_layers=None):
             if r not in seen_fl:
                 seen_fl.add(r)
                 fls.append(fl)
-        combos.extend((mode, sc, fl) for sc in scheds for fl in fls)
+        combos.extend((mode, sc, fl, "none")
+                      for sc in scheds for fl in fls)
+        combos.extend((mode, sc, fls[0], ft)
+                      for ft in fts if ft != "none" for sc in scheds)
     return combos
 
 
 def audit_combos(modes=None, schedules=None, first_layers=None,
                  passes: Optional[Sequence[str]] = None,
                  dataset: str = "mnist", n_clients: int = 3,
-                 lane_check: bool = True,
+                 lane_check: bool = True, faults=None,
                  progress=None) -> AnalysisReport:
-    """Audit every registered mode x schedule x first-layer combination
-    (the CI ``analysis`` lane).  The lane-structural retrace check runs
-    ONCE for the grid (it compares sweep lane batches, which are
-    per-dataset, not per-combo).  Returns one merged report."""
+    """Audit every registered mode x schedule x first-layer x fault
+    combination (the CI ``analysis`` lane).  The lane-structural
+    retrace check runs ONCE for the grid (it compares sweep lane
+    batches, which are per-dataset, not per-combo).  Returns one
+    merged report."""
     report = AnalysisReport()
-    combos = default_combos(modes, schedules, first_layers)
-    for i, (mode, sched, fl) in enumerate(combos):
+    combos = default_combos(modes, schedules, first_layers, faults)
+    for i, (mode, sched, fl, fault) in enumerate(combos):
         pcfg = ProtocolConfig(dataset=dataset, n_clients=n_clients,
-                              mode=mode, schedule=sched, first_layer=fl)
+                              mode=mode, schedule=sched, first_layer=fl,
+                              fault=fault)
         if progress:
             progress(f"[{i + 1}/{len(combos)}] {combo_name(pcfg)}")
         report.merge(audit(pcfg, passes=passes, lane_check=False))

@@ -109,7 +109,8 @@ def _normalize(text: str) -> str:
     return _ADDR_RE.sub("0x", text)
 
 
-def _lane_jaxpr(dataset, counts, schedules, seeds, max_clients, width):
+def _lane_jaxpr(dataset, counts, schedules, seeds, max_clients, width,
+                faults=("none",)):
     """Trace one single-config sweep lane batch (un-jitted, vmapped
     round) with the batch-wide padding/width statics pinned, so
     batches that should share a compile produce comparable jaxprs."""
@@ -118,7 +119,7 @@ def _lane_jaxpr(dataset, counts, schedules, seeds, max_clients, width):
         datasets=(dataset,), modes=("devertifl",),
         client_counts=counts, seeds=seeds, rounds=1, epochs=1,
         batch_size=16, n_samples=32, first_layer="slice",
-        schedules=schedules)
+        schedules=schedules, faults=faults)
     lb = build_lane_batch(dataset, "devertifl", scfg,
                           max_clients=max_clients, width=width)
     step_idx = jnp.zeros((lb.n_lanes,), jnp.int32)
@@ -145,6 +146,21 @@ def run_lane_check(dataset: str = "mnist") -> list:
               seeds=(0,)),
          dict(counts=(3,), schedules=("stale_k:1", "partial:0.5"),
               seeds=(0,))),
+        # fault plans are traced per-lane state, so batches differing
+        # only in rates / durations / corruption kind (and client
+        # count) must share the round body.  Straggle presence must
+        # MATCH across compared batches -- the ring depth is a static
+        # -- so both sides carry a straggle leg here.
+        ("client-count (fault lanes)",
+         dict(counts=(2,), schedules=("sync",), seeds=(0,),
+              faults=("crash:0.2", "corrupt:0.1")),
+         dict(counts=(3,), schedules=("sync",), seeds=(0,),
+              faults=("crash:0.4", "crash:0.3+corrupt:0.5:scale")),),
+        ("fault-rate (straggle ring + stale_k lanes)",
+         dict(counts=(2,), schedules=("sync", "stale_k:2"), seeds=(0,),
+              faults=("straggle:0.5:2", "straggle:0.2:1+corrupt:0.1")),
+         dict(counts=(2,), schedules=("sync", "stale_k:2"), seeds=(1,),
+              faults=("straggle:0.9:1", "straggle:0.4:2+corrupt:0.6")),),
     ]
     # batch-wide statics shared by every compared trace: padded client
     # axis 3, gather width of the 2-client split (the widest involved)

@@ -41,11 +41,14 @@ import numpy as np
 
 from repro.api.modes import get_mode
 from repro.api.spec import ExperimentSpec
-from repro.checkpoint import (latest_step, load_checkpoint, load_entry,
+from repro.checkpoint import (CheckpointCorruptError, checkpoint_steps,
+                              load_checkpoint, load_entry,
                               save_checkpoint)
 from repro.core import sweep as SW
 from repro.core.baselines import SplitNN, SplitNNConfig
 from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
+from repro.faults import (RESEED_TAG, DivergenceError, RetryPolicy,
+                          diverged)
 
 # 2 (PR 5): specs carry a ``schedule`` field; Session checkpoints grew
 # a ``sched`` subtree (the exchange-schedule scan-carry state -- stale
@@ -53,7 +56,12 @@ from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
 # ``schedule_hash`` stamp that resume() verifies before loading, so a
 # checkpoint written under one schedule cannot silently continue under
 # another.  Both changes are additive.
-RESULT_SCHEMA_VERSION = 2
+# 3 (PR 7): specs carry a ``fault`` field; the checkpoint stamp folds
+# non-none fault plans in (fault="none" keeps the PR 5 stamp, so older
+# checkpoints stay resumable); ``timings`` gains a "fault" sub-dict
+# (event counters + watchdog trips/retries) when a fault plan or a
+# RetryPolicy is active.  All changes are additive.
+RESULT_SCHEMA_VERSION = 3
 _CKPT_NAME = "session"
 
 
@@ -62,12 +70,32 @@ def _hash_array(hex_hash: str) -> np.ndarray:
     return np.frombuffer(bytes.fromhex(hex_hash), np.uint8)
 
 
+def _copy_state(state):
+    """Deep-copy a pytree of arrays.  The jitted round function donates
+    its params/opt_state buffers, so rollback snapshots must not alias
+    the live state -- jnp.array forces fresh buffers per leaf."""
+    return jax.tree.map(jnp.array, state)
+
+
 def _schedule_hash(schedule: str) -> str:
     """Process-stable 16-hex-char id of a canonical schedule spec
     string -- the checkpoint stamp resume() verifies."""
     import hashlib
     return hashlib.sha256(
         ("schedule:" + schedule).encode()).hexdigest()[:16]
+
+
+def _stream_stamp(spec) -> str:
+    """The schedule(+fault) identity stamped into checkpoints.  With
+    ``fault="none"`` this is exactly the PR 5 schedule stamp, so
+    pre-fault checkpoints stay resumable; a non-none plan extends the
+    stamped string, so a checkpoint written under one fault plan can
+    never silently continue under another (the carried fault state --
+    crash countdowns, straggler rings, counters -- belongs to its
+    plan's stream)."""
+    ident = spec.schedule if spec.fault == "none" else \
+        f"{spec.schedule}|fault={spec.fault}"
+    return _schedule_hash(ident)
 
 
 @lru_cache(maxsize=1)
@@ -134,11 +162,11 @@ def _protocol_config(spec: ExperimentSpec, internal: str) -> ProtocolConfig:
         exchange_at=spec.exchange_at, mode=internal, fedavg=spec.fedavg,
         seed=spec.seed, n_samples=spec.n_samples, engine=spec.engine,
         first_layer=spec.first_layer, schedule=spec.schedule,
-        max_clients=spec.max_clients)
+        fault=spec.fault, max_clients=spec.max_clients)
 
 
 def _sweep_config(spec: ExperimentSpec, client_counts,
-                  schedules=None) -> SW.SweepConfig:
+                  schedules=None, faults=None) -> SW.SweepConfig:
     return SW.SweepConfig(
         client_counts=tuple(client_counts), seeds=spec.seeds,
         rounds=spec.rounds, epochs=spec.epochs,
@@ -146,7 +174,9 @@ def _sweep_config(spec: ExperimentSpec, client_counts,
         exchange_at=spec.exchange_at, fedavg=spec.fedavg,
         n_samples=spec.n_samples, first_layer=spec.first_layer,
         schedules=(tuple(schedules) if schedules is not None
-                   else (spec.schedule,)))
+                   else (spec.schedule,)),
+        faults=(tuple(faults) if faults is not None
+                else (spec.fault,)))
 
 
 class Session:
@@ -184,15 +214,31 @@ class Session:
                          resumed_from=resumed_from)
 
     # ------------------------------------------------------------------
-    def run(self, key=None) -> RunResult:
+    def run(self, key=None, retry="auto") -> RunResult:
         """Train from scratch.  ``key`` overrides the spec-seed-derived
         PRNGKey (single-seed federated sessions only) -- an escape
         hatch for driving the engine on an external key stream.  NOTE
         the RunResult still carries the spec's hash (which identifies
         the spec-derived experiment), so key= is refused whenever
         checkpointing is on: a checkpoint of a custom-key run would
-        pass the resume_hash guard and resume() on the wrong stream."""
+        pass the resume_hash guard and resume() on the wrong stream.
+
+        ``retry`` is the divergence-watchdog policy (repro.faults):
+        "auto" (default) arms a default :class:`RetryPolicy` when the
+        spec carries a non-none fault plan and nothing otherwise --
+        fault-free runs keep the untouched loop; pass a RetryPolicy to
+        arm it explicitly, or None/False to disable.  On a trip the
+        round is rolled back to the last good state and retried under
+        a reseeded key (see repro.faults.recovery); trip/retry counts
+        land in ``RunResult.timings["fault"]``.  Single-seed federated
+        sessions only (multi-seed cells run the vmapped sweep engine,
+        which has no per-round host watchdog)."""
         spec = self.spec
+        if retry not in ("auto", None, False) and \
+                (self.mode.kind != "federated" or len(spec.seeds) > 1):
+            raise ValueError(
+                "retry= applies to single-seed federated sessions: the "
+                "divergence watchdog drives the per-round host loop")
         if key is not None and (self.mode.kind != "federated"
                                 or len(spec.seeds) > 1):
             raise ValueError(
@@ -213,66 +259,96 @@ class Session:
             return self._run_splitnn()
         if len(spec.seeds) > 1:
             return self._run_cell()
-        return self._run_federated(key=key)
+        return self._run_federated(key=key, retry=retry)
 
-    def resume(self) -> RunResult:
-        """Continue from the latest checkpoint in
+    def resume(self, retry="auto") -> RunResult:
+        """Continue from the newest INTACT checkpoint in
         ``spec.checkpoint_dir`` (a fresh ``run()`` if none exists).
-        Rounds after the checkpoint are bit-for-bit the uninterrupted
-        run's -- round r consumes only the carried state and
-        ``fold_in(loop_key, r)``."""
+        Corrupt/truncated checkpoint files are skipped with a warning
+        -- resume walks back to the newest one that loads
+        (CheckpointCorruptError never kills a resume while an older
+        intact step exists).  Rounds after the checkpoint are
+        bit-for-bit the uninterrupted run's -- round r consumes only
+        the carried state and ``fold_in(loop_key, r)``."""
+        import warnings
         spec = self.spec
         if not spec.checkpoint_dir:
             raise ValueError("resume() needs spec.checkpoint_dir")
         if self.mode.kind != "federated" or len(spec.seeds) > 1:
             raise ValueError("resume() supports single-seed federated "
                              "sessions")
-        step = latest_step(spec.checkpoint_dir, name=_CKPT_NAME)
-        if step is None:
-            return self.run()
-        if step > spec.rounds:
-            raise ValueError(
-                f"latest checkpoint in {spec.checkpoint_dir!r} is at "
-                f"round {step}, beyond spec.rounds={spec.rounds}: "
-                "resuming would return a longer run's params under "
-                "this spec's hash; raise rounds or point at a "
-                "different checkpoint_dir")
+        steps = checkpoint_steps(spec.checkpoint_dir, name=_CKPT_NAME)
+        if not steps:
+            return self.run(retry=retry)
         fed = self.federation
-        # verify the schedule stamp FIRST: a checkpoint written under
-        # a different exchange schedule carries differently-shaped
-        # schedule state (stale ring buffers, double-buffer slots),
-        # and the structured load below would fail with a misleading
-        # shape error instead of naming the actual mismatch
-        want_sched = _hash_array(_schedule_hash(spec.schedule))
-        got_sched = load_entry(spec.checkpoint_dir, step,
-                               "schedule_hash", name=_CKPT_NAME)
-        if got_sched is None:
-            if spec.schedule != "sync":
-                raise ValueError(
-                    f"checkpoint in {spec.checkpoint_dir!r} carries no "
-                    "schedule stamp (written by a pre-schedule "
-                    f"writer, i.e. under schedule='sync'); it cannot "
-                    f"resume under schedule={spec.schedule!r} -- the "
-                    "saved state has no schedule buffers to restore")
-        elif not np.array_equal(got_sched, want_sched):
-            raise ValueError(
-                f"checkpoint in {spec.checkpoint_dir!r} was written "
-                "under a different exchange schedule than this spec's "
-                f"{spec.schedule!r}: resuming would splice mismatched "
-                "schedule state (stale buffers / participation "
-                "stream) into this run; rebuild the spec with the "
-                "original schedule or use a fresh checkpoint_dir")
+        want_sched = _hash_array(_stream_stamp(spec))
         init_key, _ = train_keys(jax.random.PRNGKey(spec.seed))
         params_like = fed.init_params(init_key)
-        like = {"params": params_like,
-                "opt_state": jax.vmap(fed.opt.init)(params_like),
-                "step_idx": jnp.zeros((), jnp.int32),
-                "sched": fed.init_sched_state(),
-                "resume_hash": _hash_array(spec.resume_hash)}
-        if got_sched is not None:
-            like["schedule_hash"] = want_sched
-        state = load_checkpoint(spec.checkpoint_dir, step, like,
-                                name=_CKPT_NAME)
+        like_base = {"params": params_like,
+                     "opt_state": jax.vmap(fed.opt.init)(params_like),
+                     "step_idx": jnp.zeros((), jnp.int32),
+                     "sched": fed.init_sched_state(),
+                     "resume_hash": _hash_array(spec.resume_hash)}
+        state, step = None, None
+        for cand in reversed(steps):
+            try:
+                if cand > spec.rounds:
+                    raise ValueError(
+                        f"latest intact checkpoint in "
+                        f"{spec.checkpoint_dir!r} is at round {cand}, "
+                        f"beyond spec.rounds={spec.rounds}: resuming "
+                        "would return a longer run's params under "
+                        "this spec's hash; raise rounds or point at a "
+                        "different checkpoint_dir")
+                # verify the stream stamp FIRST: a checkpoint written
+                # under a different schedule or fault plan carries
+                # differently-shaped scan state (stale ring buffers,
+                # fault countdowns), and the structured load below
+                # would fail with a misleading shape error instead of
+                # naming the actual mismatch
+                got_sched = load_entry(spec.checkpoint_dir, cand,
+                                       "schedule_hash", name=_CKPT_NAME)
+                if got_sched is None:
+                    if spec.schedule != "sync" or spec.fault != "none":
+                        raise ValueError(
+                            f"checkpoint in {spec.checkpoint_dir!r} "
+                            "carries no schedule stamp (written by a "
+                            "pre-schedule writer, i.e. under "
+                            "schedule='sync', fault='none'); it "
+                            "cannot resume under schedule="
+                            f"{spec.schedule!r} / fault={spec.fault!r}"
+                            " -- the saved state has no schedule or "
+                            "fault buffers to restore")
+                elif not np.array_equal(got_sched, want_sched):
+                    raise ValueError(
+                        f"checkpoint in {spec.checkpoint_dir!r} was "
+                        "written under a different exchange schedule "
+                        "or fault plan than this spec's "
+                        f"(schedule={spec.schedule!r}, "
+                        f"fault={spec.fault!r}): resuming would "
+                        "splice mismatched scan state (stale buffers "
+                        "/ participation stream / fault countdowns) "
+                        "into this run; rebuild the spec with the "
+                        "original schedule+fault or use a fresh "
+                        "checkpoint_dir")
+                like = dict(like_base)
+                if got_sched is not None:
+                    like["schedule_hash"] = want_sched
+                state = load_checkpoint(spec.checkpoint_dir, cand,
+                                        like, name=_CKPT_NAME)
+                step = cand
+                break
+            except CheckpointCorruptError as e:
+                warnings.warn(
+                    f"resume(): skipping corrupt checkpoint at round "
+                    f"{cand} ({e}); falling back to the next older "
+                    "step", RuntimeWarning, stacklevel=2)
+        if state is None:
+            warnings.warn(
+                f"resume(): every checkpoint in "
+                f"{spec.checkpoint_dir!r} is corrupt; training from "
+                "scratch", RuntimeWarning, stacklevel=2)
+            return self.run(retry=retry)
         if not np.array_equal(state["resume_hash"],
                               _hash_array(spec.resume_hash)):
             raise ValueError(
@@ -288,7 +364,7 @@ class Session:
             start_round=step,
             state=(state["params"], state["opt_state"],
                    state["step_idx"], state["sched"]),
-            resumed_from=step)
+            resumed_from=step, retry=retry)
 
     def predict(self, x, params=None):
         """Class predictions on raw (original-column-order) inputs.
@@ -314,10 +390,26 @@ class Session:
         return self._runner.predict(params, x)
 
     # ------------------------------------------------------------------
+    def _retry_policy(self, retry) -> Optional[RetryPolicy]:
+        """Resolve the run()/resume() ``retry`` argument to a
+        RetryPolicy or None.  "auto" arms the default policy exactly
+        when the spec carries a fault plan -- fault-free runs keep the
+        pre-watchdog loop (no snapshot copies, no host sync)."""
+        if retry == "auto":
+            return RetryPolicy() if self.spec.fault != "none" else None
+        if retry is None or retry is False:
+            return None
+        if isinstance(retry, RetryPolicy):
+            return retry
+        raise TypeError(
+            f"retry must be 'auto', None/False, or a RetryPolicy; got "
+            f"{type(retry).__name__}")
+
     def _run_federated(self, key=None, start_round=0, state=None,
-                       resumed_from=None) -> RunResult:
+                       resumed_from=None, retry="auto") -> RunResult:
         spec = self.spec
         fed = self.federation
+        policy = self._retry_policy(retry)
         key = key if key is not None else jax.random.PRNGKey(spec.seed)
         init_key, loop_key = train_keys(key)
         if state is None:
@@ -328,9 +420,22 @@ class Session:
         else:
             params, opt_state, step_idx, sched_state = state
         history = []
+        trips = retries = attempt = 0
+        # the jitted round donates params/opt_state buffers, so the
+        # rollback snapshot must be DEEP copies -- jnp.array per leaf
+        snapshot = None if policy is None else _copy_state(
+            (params, opt_state, step_idx, sched_state))
         t0 = time.perf_counter()
-        for r in range(start_round, spec.rounds):
+        r = start_round
+        while r < spec.rounds:
             rkey = jax.random.fold_in(loop_key, r)
+            if attempt > 0:
+                # a retried round re-rolls its stochastic draws (fault
+                # coins, participation, batch shuffles) on a reseeded
+                # key; attempt=0 keeps the canonical stream, so runs
+                # that never trip are bitwise the watchdog-free run
+                rkey = jax.random.fold_in(
+                    jax.random.fold_in(rkey, RESEED_TAG), attempt)
             if spec.engine == "scan":
                 params, opt_state, step_idx, sched_state, losses = \
                     fed._round(params, opt_state, step_idx, sched_state,
@@ -339,6 +444,37 @@ class Session:
                 params, opt_state, step_idx, sched_state, losses = \
                     fed._python_round(params, opt_state, step_idx,
                                       sched_state, rkey)
+            if policy is not None and \
+                    diverged(losses, policy.loss_threshold):
+                trips += 1
+                if attempt >= policy.max_retries:
+                    raise DivergenceError(
+                        f"round {r} of spec {spec.spec_hash} "
+                        f"(fault={spec.fault!r}, "
+                        f"schedule={spec.schedule!r}) diverged "
+                        f"(non-finite loss or |loss| > "
+                        f"{policy.loss_threshold:g}) and stayed "
+                        f"diverged after {policy.max_retries} reseeded "
+                        "retries from the last good state; the run is "
+                        "not recoverable under this plan -- lower the "
+                        "fault rate / lr, raise "
+                        "RetryPolicy(max_retries=...), or inspect the "
+                        "exchange guard telemetry of a retry='none' "
+                        "run")
+                attempt += 1
+                retries += 1
+                s = policy.sleep_s(attempt)
+                if s > 0:
+                    time.sleep(s)
+                # roll back: restore COPIES so the snapshot survives
+                # donation by the next attempt's round call
+                params, opt_state, step_idx, sched_state = \
+                    _copy_state(snapshot)
+                continue
+            attempt = 0
+            if policy is not None:
+                snapshot = _copy_state(
+                    (params, opt_state, step_idx, sched_state))
             if spec.eval_every and (r + 1) % spec.eval_every == 0:
                 ev = fed.evaluate(params)
                 ev["round"] = r
@@ -352,9 +488,9 @@ class Session:
                     {"params": params, "opt_state": opt_state,
                      "step_idx": step_idx, "sched": sched_state,
                      "resume_hash": _hash_array(spec.resume_hash),
-                     "schedule_hash": _hash_array(
-                         _schedule_hash(spec.schedule))},
+                     "schedule_hash": _hash_array(_stream_stamp(spec))},
                     name=_CKPT_NAME)
+            r += 1
         jax.block_until_ready(params)
         wall = time.perf_counter() - t0
         final = fed.evaluate(params)
@@ -362,6 +498,11 @@ class Session:
         steps = rounds_run * spec.epochs * fed.n_batches
         timings = {"wall_s": wall,
                    "steps_per_sec": steps / max(wall, 1e-9)}
+        tel = fed.fault_telemetry(sched_state)
+        if tel is not None or policy is not None:
+            timings["fault"] = {
+                **({k: int(v) for k, v in tel.items()} if tel else {}),
+                "watchdog_trips": trips, "retries": retries}
         return self._result(final, history, params, timings,
                             resumed_from=resumed_from)
 
@@ -378,6 +519,8 @@ class Session:
                    "seeds": cell["seeds"]}
         timings = {"wall_s": cell["wall_s"],
                    "steps_per_sec": cell["steps_per_sec"]}
+        if "fault_telemetry" in cell:
+            timings["fault"] = cell["fault_telemetry"]
         return self._result(metrics, [], None, timings)
 
     def _splitnn_config(self, seed) -> SplitNNConfig:
@@ -423,9 +566,10 @@ def build(spec: ExperimentSpec) -> Session:
 # ---------------------------------------------------------------------------
 # spec grids
 # ---------------------------------------------------------------------------
-# grid cells must agree on everything but (dataset, mode, schedule,
-# n_clients): they share one compiled round function per
-# (dataset, mode) group (schedule and count are vmapped lane axes)
+# grid cells must agree on everything but (dataset, mode, fault,
+# schedule, n_clients): they share one compiled round function per
+# (dataset, mode) group (fault, schedule and count are vmapped lane
+# axes)
 _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
                 "exchange_at", "fedavg", "engine", "first_layer",
                 "n_samples", "shard")
@@ -434,17 +578,18 @@ _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
 def spec_grid(datasets=("mnist", "fmnist", "titanic", "bank"),
               modes=("devertifl", "non_federated", "verticomb"),
               client_counts=(2, 3, 5), seeds=(0, 1, 2),
-              schedules=("sync",), **common):
-    """The cartesian datasets x modes x schedules x client_counts spec
-    grid (the axes the paper's Table 2 varies, plus the PR 5 exchange
-    schedule axis -- staleness-tolerance grids are spec grids too).
+              schedules=("sync",), faults=("none",), **common):
+    """The cartesian datasets x modes x faults x schedules x
+    client_counts spec grid (the axes the paper's Table 2 varies, plus
+    the PR 5 exchange-schedule axis and the PR 7 fault axis --
+    staleness- and fault-tolerance grids are spec grids too).
     ``common`` forwards to every ExperimentSpec (rounds=, epochs=,
     first_layer=, ...)."""
     return tuple(
         ExperimentSpec(dataset=ds, mode=mode, n_clients=nc, seeds=seeds,
-                       schedule=sched, **common)
-        for ds in datasets for mode in modes for sched in schedules
-        for nc in client_counts)
+                       schedule=sched, fault=f, **common)
+        for ds in datasets for mode in modes for f in faults
+        for sched in schedules for nc in client_counts)
 
 
 def _grid_groups(specs):
@@ -478,31 +623,35 @@ def _grid_groups(specs):
         gk = (s.dataset, s.mode)
         g = groups.setdefault(gk, [])
         if any(p.n_clients == s.n_clients and p.schedule == s.schedule
-               for p in g):
+               and p.fault == s.fault for p in g):
             raise ValueError(f"duplicate grid cell {s.dataset}/{s.mode}/"
-                             f"{s.schedule}/{s.n_clients}")
+                             f"{s.fault}/{s.schedule}/{s.n_clients}")
         g.append(s)
     return list(groups.items())
 
 
 def _group_axes(group):
-    """Ordered-unique (client_counts, schedules) of one (dataset, mode)
-    spec group; the group must cover the full schedule x count
-    cartesian (every schedule lane reuses one padded count batch)."""
-    counts, schedules = [], []
+    """Ordered-unique (client_counts, schedules, faults) of one
+    (dataset, mode) spec group; the group must cover the full fault x
+    schedule x count cartesian (every fault/schedule lane reuses one
+    padded count batch)."""
+    counts, schedules, faults = [], [], []
     for s in group:
         if s.n_clients not in counts:
             counts.append(s.n_clients)
         if s.schedule not in schedules:
             schedules.append(s.schedule)
-    want = {(sc, nc) for sc in schedules for nc in counts}
-    got = {(s.schedule, s.n_clients) for s in group}
+        if s.fault not in faults:
+            faults.append(s.fault)
+    want = {(f, sc, nc) for f in faults for sc in schedules
+            for nc in counts}
+    got = {(s.fault, s.schedule, s.n_clients) for s in group}
     if got != want or len(group) != len(want):
         raise ValueError(
             f"spec grid group {group[0].dataset}/{group[0].mode} must "
-            f"cover the full schedule x client-count cartesian "
+            f"cover the full fault x schedule x client-count cartesian "
             f"{sorted(want)}; got {sorted(got)}")
-    return tuple(counts), tuple(schedules)
+    return tuple(counts), tuple(schedules), tuple(faults)
 
 
 def sweep_config_for_specs(specs):
@@ -515,9 +664,9 @@ def sweep_config_for_specs(specs):
             f"{[f'{ds}/{m}' for (ds, m), _ in groups]}; use "
             "repro.api.run_grid for multi-group spec grids")
     (ds, mode), group = groups[0]
-    counts, schedules = _group_axes(group)
+    counts, schedules, faults = _group_axes(group)
     return ds, get_mode(mode).internal, _sweep_config(group[0], counts,
-                                                      schedules)
+                                                      schedules, faults)
 
 
 def run_grid(specs, shard=None):
@@ -526,19 +675,26 @@ def run_grid(specs, shard=None):
     ({"cells": {"ds/mode/n": cell}, "compare": ...}), with each cell
     additionally stamped with the ``spec_hash`` of the spec that
     produced it.  A non-default schedule axis inserts the schedule
-    into the keys ("ds/mode/sched/n"; sync-only grids keep the
-    historical keys).  ``shard`` overrides the specs' shard policy."""
+    into the keys ("ds/mode/sched/n"), and a non-default fault axis
+    prepends the fault plan ("ds/mode/fault/sched/n"); sync-only
+    fault-free grids keep the historical keys.  ``shard`` overrides
+    the specs' shard policy."""
     cells, compare = {}, {}
     for (ds, mode), group in _grid_groups(specs):
-        counts, schedules = _group_axes(group)
+        counts, schedules, faults = _group_axes(group)
         out = SW.run_padded_cells(
             ds, get_mode(mode).internal,
-            _sweep_config(group[0], counts, schedules),
+            _sweep_config(group[0], counts, schedules, faults),
             shard=group[0].shard if shard is None else shard)
         sync_only = schedules == ("sync",)
+        none_only = faults == ("none",)
         for s in group:
-            ck = s.n_clients if sync_only else \
-                f"{s.schedule}/{s.n_clients}"
+            if not none_only:
+                ck = f"{s.fault}/{s.schedule}/{s.n_clients}"
+            elif not sync_only:
+                ck = f"{s.schedule}/{s.n_clients}"
+            else:
+                ck = s.n_clients
             cell = out["cells"][ck]
             cell["spec_hash"] = s.spec_hash
             cells[f"{ds}/{mode}/{ck}"] = cell

@@ -73,6 +73,13 @@ class ExperimentSpec:
     # federations only.  The default "sync" is EXCLUDED from
     # spec_hash so every pre-existing sync spec keeps its id.
     schedule: str = "sync"
+    # Fault plan (repro.faults spec string, validated against the
+    # fault registry and canonicalized): "none" | "crash:p[:dur]" |
+    # "straggle:p:d" | "corrupt:p[:nan|scale]" | '+'-compositions |
+    # a register_fault name.  Non-none plans run devertifl
+    # federations only.  The default "none" is EXCLUDED from
+    # spec_hash so every pre-existing spec keeps its id.
+    fault: str = "none"
     max_clients: Optional[int] = None   # pad client axis with dead slots
     shard: Union[str, bool, int] = "auto"   # grid lanes: "auto"|False|int
     n_samples: Optional[int] = None     # dataset size override (speed)
@@ -115,6 +122,17 @@ class ExperimentSpec:
                 f"(the scheduled dataflow is the forward "
                 f"HiddenOutputExchange); mode {self.mode!r} supports "
                 "schedule='sync' only")
+        from repro.faults import get_fault_plan
+        plan = get_fault_plan(self.fault)        # raises w/ options
+        # canonicalize ("crash:0.2:1" -> "crash:0.2") so formatting
+        # cannot fork spec_hash
+        object.__setattr__(self, "fault", plan.spec)
+        if not plan.is_none and mode.internal != "devertifl":
+            raise ValueError(
+                f"fault plan {plan.spec!r} requires mode='devertifl' "
+                "(faults are injected into the forward "
+                f"HiddenOutputExchange); mode {self.mode!r} supports "
+                "fault='none' only")
         if self.first_layer == "auto":
             # resolve backend-dependent "auto" NOW so the spec (and
             # its hash) records the lane that actually runs -- two
@@ -192,6 +210,10 @@ class ExperimentSpec:
         # joinable across the PR); non-sync schedules fork the hash
         if d.get("schedule") == "sync":
             del d["schedule"]
+        # same contract for the fault axis (PR 7): fault="none" specs
+        # hash identically to pre-fault specs; non-none plans fork
+        if d.get("fault") == "none":
+            del d["fault"]
         blob = json.dumps(d, sort_keys=True, default=list)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 

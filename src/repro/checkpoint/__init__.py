@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
-    latest_step, load_checkpoint, load_entry, save_checkpoint,
+    CheckpointCorruptError, checkpoint_steps, latest_step,
+    load_checkpoint, load_entry, save_checkpoint,
 )

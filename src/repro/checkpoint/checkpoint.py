@@ -7,15 +7,49 @@ model sets alike -- including padded client axes (dead slots round-trip
 unchanged, empty arrays included) and NamedTuple nodes like
 ``LayoutArrays`` (attribute path keys), which the old '/'-join crashed
 on (``GetAttrKey`` has neither ``.key`` nor ``.idx``).
+
+Corrupt files -- a truncated write, disk corruption, something that is
+not an npz at all -- raise :class:`CheckpointCorruptError` instead of
+a raw zipfile/zlib traceback, from every read path (``load_entry``,
+``load_checkpoint``); a MISSING file still raises FileNotFoundError.
+``checkpoint_steps`` lists every step on disk so callers (e.g.
+``Session.resume``) can walk back to the newest intact checkpoint.
 """
 from __future__ import annotations
 
 import os
 import re
 import tempfile
+import zipfile
+import zlib
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file exists but cannot be read back -- truncated
+    write, disk corruption, or not an npz archive.  The message names
+    the file; delete it (or let ``Session.resume()`` skip it) and fall
+    back to an older step."""
+
+
+def _open_npz(path):
+    """np.load with corrupt-file detection.  Missing files raise
+    FileNotFoundError untouched; unreadable ones raise
+    CheckpointCorruptError naming the file."""
+    if not os.path.exists(path):
+        raise FileNotFoundError(path)
+    try:
+        data = np.load(path, allow_pickle=False)
+        data.files     # force the zip central directory to parse
+        return data
+    except (zipfile.BadZipFile, zlib.error, ValueError, OSError,
+            EOFError, KeyError) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is corrupt or truncated "
+            f"({type(e).__name__}: {e}); delete it and resume from an "
+            "older step") from e
 
 
 def _key_part(p) -> str:
@@ -55,13 +89,20 @@ def save_checkpoint(directory, step, tree, name="state"):
     return path
 
 
-def latest_step(directory, name="state"):
+def checkpoint_steps(directory, name="state"):
+    """All checkpoint steps present in ``directory``, ascending
+    (``[]`` if none / no directory).  Presence only -- a listed step
+    may still raise CheckpointCorruptError when read."""
     if not os.path.isdir(directory):
-        return None
+        return []
     pat = re.compile(rf"{name}_(\d+)\.npz$")
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := pat.match(f))]
-    return max(steps) if steps else None
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := pat.match(f)))
+
+
+def latest_step(directory, name="state"):
+    steps = checkpoint_steps(directory, name=name)
+    return steps[-1] if steps else None
 
 
 def load_entry(directory, step, key, name="state"):
@@ -71,8 +112,15 @@ def load_entry(directory, step, key, name="state"):
     error BEFORE attempting a full structured load whose like_tree
     shapes would otherwise produce a misleading mismatch message."""
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
-    with np.load(path) as data:
-        return data[key] if key in data.files else None
+    with _open_npz(path) as data:
+        try:
+            return data[key] if key in data.files else None
+        except (zipfile.BadZipFile, zlib.error, ValueError, OSError,
+                EOFError) as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {path} is corrupt or truncated "
+                f"({type(e).__name__}: {e}); delete it and resume "
+                "from an older step") from e
 
 
 def load_checkpoint(directory, step, like_tree, name="state"):
@@ -80,7 +128,7 @@ def load_checkpoint(directory, step, like_tree, name="state"):
     are cast to the like leaf's dtype, a no-op for same-dtype
     round-trips)."""
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
-    data = np.load(path)
+    data = _open_npz(path)
     treedef = jax.tree_util.tree_structure(like_tree)
     leaves = []
     for key, leaf in _flat_with_paths(like_tree):
@@ -89,7 +137,16 @@ def load_checkpoint(directory, step, like_tree, name="state"):
                 f"checkpoint {path} has no entry {key!r}; the like_tree "
                 "structure does not match the saved tree "
                 f"(saved keys: {sorted(data.files)[:8]}...)")
-        arr = data[key]
+        try:
+            # member decompression is lazy; a truncated/corrupt member
+            # surfaces here, not at open
+            arr = data[key]
+        except (zipfile.BadZipFile, zlib.error, ValueError, OSError,
+                EOFError) as e:
+            raise CheckpointCorruptError(
+                f"checkpoint {path} is corrupt or truncated "
+                f"({type(e).__name__}: {e}); delete it and resume "
+                "from an older step") from e
         if arr.shape != tuple(leaf.shape):
             raise ValueError(
                 f"shape mismatch for {key!r}: checkpoint has "

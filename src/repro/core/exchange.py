@@ -79,6 +79,34 @@ def scheduled_exchange(h_all, h_ref, eff_mask):
     return h_all + (total - hm)
 
 
+def screen_exchange(payload, last_good, max_abs):
+    """Non-finite/magnitude screen over a per-client exchange stack.
+
+    ``payload`` is [n_clients, B, H] about to enter the exchange sum;
+    a client's slice is BAD when it contains any non-finite value or
+    its magnitude exceeds ``max_abs`` (a NaN maximum compares False
+    against the threshold, so both tests catch it independently).  Bad
+    slices are replaced with that client's ``last_good`` slice (zeros
+    before its first clean round -- the exchange-free cold-start
+    idiom), which keeps NaN/Inf out of the reduction entirely: masking
+    AFTER the sum would still poison it, since NaN * 0.0 is NaN.
+
+    Returns ``(screened, bad)`` with ``bad`` a [n_clients] bool mask of
+    quarantined slots.  The caller (repro.faults.FaultImpl) drops
+    quarantined clients from the round's FedAvg weighting exactly like
+    dead padded slots and counts the events into telemetry.  Every op
+    here (is_finite / reduce_and / reduce_max / select_n) is handled
+    by the static auditor's taint and deadness interpreters, and
+    ``bad[i]`` derives only from client i's payload, so the per-slot
+    separation contract is preserved."""
+    red = tuple(range(1, payload.ndim))
+    ok = jnp.isfinite(payload).all(axis=red) & \
+        (jnp.abs(payload).max(axis=red) <= jnp.float32(max_abs))
+    bad = ~ok
+    sel = bad.reshape((-1,) + (1,) * (payload.ndim - 1))
+    return jnp.where(sel, last_good, payload), bad
+
+
 def fedavg(stacked_params, client_mask=None):
     """P2P weight exchange + FedAvg (Algorithm 1 lines 16-19): every
     client receives every peer's weights and averages. stacked_params

@@ -134,6 +134,12 @@ class ProtocolConfig:
     # "double_buffer", "partial:0.8", "stale_k:4+partial:0.5" run the
     # schedule-aware round (devertifl mode only).
     schedule: str = "sync"
+    # Fault plan (repro.faults spec string): deterministic adversity
+    # injected into the exchange.  "none" is the untouched engine
+    # path; "crash:0.2", "straggle:0.5:2", "corrupt:0.05:scale",
+    # "crash:0.2+corrupt:0.05" wrap the schedule impl in the
+    # fault-aware state machine (devertifl mode only).
+    fault: str = "none"
     # Pad the client axis to this length with dead (masked) slots; None
     # means no padding. Live trajectories are bit-for-bit unchanged --
     # padding only buys shape-uniformity across client counts.
@@ -234,6 +240,34 @@ def resolve_schedule(pcfg, model, n_train):
         sched, pcfg.padded_clients, min(pcfg.batch_size, n_train),
         exchange_width(model, pcfg.exchange_at))
     return sched, impl
+
+
+def resolve_engine(pcfg, model, n_train):
+    """pcfg.schedule + pcfg.fault -> (Schedule, impl).  With
+    ``fault="none"`` this IS :func:`resolve_schedule` -- same objects,
+    same (possibly None) impl, so the fault-free engine stays
+    bit-for-bit the pre-fault one and literal sync keeps its legacy
+    path.  A non-none plan (devertifl only) wraps the schedule impl in
+    the fault state machine; literal sync is first promoted to a
+    depth-0 ring impl (``stale_k:0``, proven bitwise-sync by
+    tests/test_schedule.py) so the fault layer has hooks to ride."""
+    sched, impl = resolve_schedule(pcfg, model, n_train)
+    fault = getattr(pcfg, "fault", "none")
+    from repro.faults import get_fault_plan, make_fault_impl
+    plan = get_fault_plan(fault)
+    if plan.is_none:
+        return sched, impl
+    if pcfg.mode != "devertifl":
+        raise ValueError(
+            f"fault plan {plan.spec!r} requires mode='devertifl'; mode "
+            f"{pcfg.mode!r} supports fault='none' only")
+    bs = min(pcfg.batch_size, n_train)
+    width = exchange_width(model, pcfg.exchange_at)
+    if impl is None:
+        from repro.schedule import LaneScheduleImpl
+        impl = LaneScheduleImpl(0, pcfg.padded_clients, bs, width)
+    return sched, make_fault_impl(plan, impl, pcfg.padded_clients, bs,
+                                  width)
 
 
 # ---------------------------------------------------------------------------
@@ -586,7 +620,7 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None,
             "into every live client")
     impl = sched_impl
     if impl is None:
-        _, impl = resolve_schedule(pcfg, model, n_train)
+        _, impl = resolve_engine(pcfg, model, n_train)
 
     if impl is None:        # sync: the legacy round, bit-for-bit
         step = make_step_fn(model, opt, pcfg, layout=layout,
@@ -646,7 +680,12 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None,
             jax.lax.scan(body, (params, opt_state, step_idx,
                                 sched_state), idx)
         if do_fedavg:
-            params = call_fedavg(fedavg_fn, params, eff_mask)
+            # optional fault-layer hook: quarantined clients drop out
+            # of the round's aggregation like dead padded slots
+            fam = getattr(impl, "fedavg_mask", None)
+            mask = eff_mask if fam is None else fam(sched_state,
+                                                    eff_mask)
+            params = call_fedavg(fedavg_fn, params, mask)
         sched_state = impl.round_end(sched_state)
         return params, opt_state, step_idx, sched_state, losses
 
@@ -757,8 +796,8 @@ class DeVertiFL:
         pcfg = self.pcfg
         n_train = len(self.xtr)
         fa = self._fedavg_fn or fedavg
-        self._schedule, self._impl = resolve_schedule(pcfg, self.model,
-                                                      n_train)
+        self._schedule, self._impl = resolve_engine(pcfg, self.model,
+                                                    n_train)
         plan = make_perm_fn(pcfg, n_train)
         self.n_batches, self.bs = plan.n_batches, plan.batch_size
         self._steps_per_round = pcfg.epochs * plan.n_batches
@@ -790,12 +829,20 @@ class DeVertiFL:
             self._round_start = jax.jit(self._impl.round_start)
             self._fedavg_sched = jax.jit(
                 lambda p, m: call_fedavg(fa, p, m), donate_argnums=(0,))
+            fam = getattr(self._impl, "fedavg_mask", None)
+            self._fedavg_mask = None if fam is None else jax.jit(fam)
 
     def init_sched_state(self):
         """Initial exchange-schedule scan-carry state (``{}`` for the
         sync schedule -- an empty pytree the round threads through)."""
         return {} if self._impl is None else \
             self._impl.init_state(self._schedule)
+
+    def fault_telemetry(self, sched_state):
+        """Cumulative fault-event counters carried in the scan state
+        (repro.faults), or None when no fault plan is active."""
+        tel = getattr(self._impl, "telemetry", None)
+        return None if tel is None else tel(sched_state)
 
     def set_fedavg(self, fedavg_fn):
         """Swap the aggregation function (e.g. weighted FedAvg) and
@@ -854,7 +901,9 @@ class DeVertiFL:
             step_idx = step_idx + 1
             losses.append(loss)
         if do_avg:
-            params = self._fedavg_sched(params, eff_mask)
+            mask = eff_mask if self._fedavg_mask is None else \
+                self._fedavg_mask(sched_state, eff_mask)
+            params = self._fedavg_sched(params, mask)
         sched_state = self._impl.round_end(sched_state)
         return params, opt_state, step_idx, sched_state, \
             jnp.stack(losses)

@@ -107,6 +107,13 @@ class SweepConfig:
     # Non-sync schedules run devertifl mode only; double_buffer and
     # custom schedules cannot share a lane axis with other schedules.
     schedules: Sequence[str] = ("sync",)
+    # Fault-plan lane axis (repro.faults spec strings).  Rates,
+    # durations and corruption kind ride the traced fault state, so a
+    # fault-tolerance grid (none / crash / corrupt lanes) shares the
+    # one compiled round too; the straggler ring is sized to the
+    # largest delay across lanes.  Non-none plans run devertifl mode
+    # only; custom plans cannot ride a lane axis.
+    faults: Sequence[str] = ("none",)
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +218,59 @@ def _stacked_sched_state(impl, scheds, n_base):
 
 
 # ---------------------------------------------------------------------------
+# fault-plan lanes
+# ---------------------------------------------------------------------------
+def _sweep_faults(scfg, mode, model, n_clients, n_train, impl):
+    """Parse scfg.faults into (plans, impl, none_only) for a lane batch
+    of one (dataset, mode).  A none-only axis hands the schedule impl
+    back untouched -- the fault-free sweep is bit-for-bit the pre-fault
+    one.  Mixed fault lanes share ONE FaultImpl: rates / durations /
+    corruption kind are traced per-lane state, and the straggler ring
+    is sized to the largest delay across lanes.  Literal sync under a
+    fault axis is promoted to the depth-0 ring impl (proven
+    bitwise-sync) so the fault layer has four-hook state to ride;
+    custom plans (like custom schedules) may close over per-federation
+    statics and are refused."""
+    from repro.faults import get_fault_plan, make_fault_impl
+    if not scfg.faults:
+        raise ValueError("faults must name at least one fault plan")
+    plans = tuple(get_fault_plan(f) for f in scfg.faults)
+    if len(plans) == 1 and plans[0].is_none:
+        return plans, impl, True
+    if mode != "devertifl":
+        raise ValueError(
+            f"fault plans beyond 'none' require mode='devertifl' sweep "
+            f"cells, got mode {mode!r}")
+    if any(p.custom is not None for p in plans):
+        raise ValueError(
+            "custom fault plans are not supported in sweep lanes "
+            "(their impls may close over per-federation statics the "
+            "lane vmap cannot vary); run them as standalone sessions")
+    from repro.core.protocol import exchange_width
+    bs = min(scfg.batch_size, n_train)
+    width = exchange_width(model, scfg.exchange_at)
+    if impl is None:
+        from repro.schedule import LaneScheduleImpl
+        impl = LaneScheduleImpl(0, n_clients, bs, width)
+    impl = make_fault_impl(plans[0], impl, n_clients, bs, width,
+                           max_delay=max(p.max_delay for p in plans))
+    return plans, impl, False
+
+
+def _stacked_fault_state(impl, plans, scheds, n_base, none_only):
+    """Per-lane initial carry states, fault-major over the
+    schedule-major base ((plan, sched) blocks of n_base lanes each).
+    A none-only fault axis reduces to :func:`_stacked_sched_state`."""
+    if none_only:
+        return _stacked_sched_state(impl, scheds, n_base)
+    per = [jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_base,) + a.shape),
+        impl.init_state(sc, plan=pl))
+        for pl in plans for sc in scheds]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *per)
+
+
+# ---------------------------------------------------------------------------
 # lane stacking
 # ---------------------------------------------------------------------------
 def _stacked_federations(dataset, n_clients, seeds, n_samples):
@@ -289,8 +349,10 @@ def _train_rounds(vround, vfold, params, opt_state, sched_state,
     benchmarks/protocol_bench's warmed-up timings).  Shared by
     run_cell and run_padded_cells so the looped-vs-padded benchmark
     comparison can never diverge on timing protocol.  sched_state is
-    the per-lane exchange-schedule carry ({} for sync).  Returns
-    (params, opt_state, losses, wall, timed_rounds)."""
+    the per-lane exchange-schedule(+fault) carry ({} for sync).
+    Returns (params, opt_state, sched_state, losses, wall,
+    timed_rounds) -- the final carry is returned so fault telemetry
+    counters can be read back per lane."""
     step_idx = jnp.zeros((loop_keys.shape[0],), jnp.int32)
     t0 = time.perf_counter()
     losses = None
@@ -304,8 +366,8 @@ def _train_rounds(vround, vfold, params, opt_state, sched_state,
             t0 = time.perf_counter()
             timed_rounds = rounds - 1
     jax.block_until_ready(losses)
-    return (params, opt_state, losses, time.perf_counter() - t0,
-            timed_rounds)
+    return (params, opt_state, sched_state, losses,
+            time.perf_counter() - t0, timed_rounds)
 
 
 # ---------------------------------------------------------------------------
@@ -320,12 +382,16 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         raise ValueError(
             "run_cell takes exactly one schedule; use "
             "run_padded_cells(schedules=...) for schedule grids")
+    if len(scfg.faults) != 1:
+        raise ValueError(
+            "run_cell takes exactly one fault plan; use "
+            "run_padded_cells(faults=...) for fault grids")
     pcfg = ProtocolConfig(
         dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
         n_samples=scfg.n_samples, first_layer=scfg.first_layer,
-        schedule=scfg.schedules[0])
+        schedule=scfg.schedules[0], fault=scfg.faults[0])
     model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
@@ -334,7 +400,10 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     n_seeds, n_train = xtr.shape[0], xtr.shape[1]
     scheds, impl, _ = _sweep_schedules(scfg, mode, model, n_clients,
                                        n_train)
-    sched_state = _stacked_sched_state(impl, scheds, n_seeds)
+    plans, impl, none_only = _sweep_faults(scfg, mode, model, n_clients,
+                                           n_train, impl)
+    sched_state = _stacked_fault_state(impl, plans, scheds, n_seeds,
+                                       none_only)
 
     def init_one(key):
         init_key, loop_key = train_keys(key)
@@ -350,9 +419,9 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
     vpred = jax.jit(jax.vmap(make_predict_fn(model, pcfg, layout=layout)))
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
-    params, opt_state, losses, wall, timed_rounds = _train_rounds(
-        vround, vfold, params, opt_state, sched_state, loop_keys,
-        xtr, ytr, lay, pcfg.rounds)
+    params, opt_state, sched_state, losses, wall, timed_rounds = \
+        _train_rounds(vround, vfold, params, opt_state, sched_state,
+                      loop_keys, xtr, ytr, lay, pcfg.rounds)
 
     preds = np.asarray(vpred(params, xte, lay))      # [S, n, B_test]
     yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
@@ -360,7 +429,7 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
                               [(n_clients, s) for s in scfg.seeds])
     steps = timed_rounds * pcfg.epochs * make_perm_fn(pcfg,
                                                       n_train).n_batches
-    return {
+    cell = {
         "dataset": dataset, "mode": mode, "n_clients": n_clients,
         "seeds": list(scfg.seeds),
         "f1_per_seed": f1s, "acc_per_seed": accs,
@@ -370,6 +439,12 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         "wall_s": wall,
         "steps_per_sec": steps * n_seeds / max(wall, 1e-9),
     }
+    if not none_only:
+        cell["fault"] = plans[0].spec
+        tel = impl.telemetry(sched_state)
+        cell["fault_telemetry"] = {k: int(np.sum(v))
+                                   for k, v in tel.items()}
+    return cell
 
 
 # ---------------------------------------------------------------------------
@@ -433,12 +508,15 @@ class LaneBatch(NamedTuple):
     xte: object
     yte: object
     lay: object
-    lanes: tuple                # [(n_clients, seed), ...] sched-major
-    scheds: tuple
+    lanes: tuple                # [(n_clients, seed), ...] fault-major
+    scheds: tuple               # then sched-major over the base batch
     sync_only: bool
     n_train: int
-    n_base: int                 # lanes per schedule (count x seed)
+    n_base: int                 # lanes per (fault, schedule) block
     width: int
+    plans: tuple = ()           # parsed FaultPlans (fault lane axis)
+    none_only: bool = True      # fault axis is the default ("none",)
+    impl: object = None         # the resolved lane impl (None = sync)
 
     @property
     def n_lanes(self) -> int:
@@ -447,13 +525,14 @@ class LaneBatch(NamedTuple):
 
 def build_lane_batch(dataset, mode, scfg: SweepConfig,
                      max_clients=None, width=None) -> LaneBatch:
-    """Assemble the schedules x client_counts x seeds lane batch of one
-    (dataset, mode) pair: stacked data/layouts/keys, per-count padded
-    inits, schedule-major tiling, and the single un-jitted round
-    function every lane shares.  ``max_clients`` widens the padded
-    client axis beyond max(client_counts) and ``width`` widens the
-    gather-slice first layer -- the auditor pins both so sub-batches
-    that must share a compile stay shape-identical."""
+    """Assemble the faults x schedules x client_counts x seeds lane
+    batch of one (dataset, mode) pair: stacked data/layouts/keys,
+    per-count padded inits, fault-major-over-schedule-major tiling,
+    and the single un-jitted round function every lane shares.
+    ``max_clients`` widens the padded client axis beyond
+    max(client_counts) and ``width`` widens the gather-slice first
+    layer -- the auditor pins both so sub-batches that must share a
+    compile stay shape-identical."""
     counts = tuple(scfg.client_counts)
     max_c = max_clients or max(counts)
     if max_c < max(counts):
@@ -480,7 +559,9 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
     first = _sweep_first_layer(pcfg, width)
     scheds, impl, sync_only = _sweep_schedules(scfg, mode, model,
                                                max_c, n_train)
-    n_sched = len(scheds)
+    plans, impl, none_only = _sweep_faults(scfg, mode, model, max_c,
+                                           n_train, impl)
+    n_sched, n_fault = len(scheds), len(plans)
 
     # per-count init (live keys must be split(init_key, nc) -- a
     # count-static derivation -- so init compiles once per count;
@@ -498,20 +579,24 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
     opt_state = jax.tree.map(lambda *a: jnp.concatenate(a), *os_)
     loop_keys = jnp.concatenate(lks)
 
-    # schedule-major lane tiling: every schedule reuses the SAME
-    # (count x seed) base batch -- same data, same layouts, same
-    # inits, same key streams -- and differs only in the per-lane
-    # schedule state (traced k / p / det + buffers)
-    if n_sched > 1:
+    # fault-major-over-schedule-major lane tiling: every (fault,
+    # schedule) pair reuses the SAME (count x seed) base batch -- same
+    # data, same layouts, same inits, same key streams -- and differs
+    # only in the per-lane carry state (traced k / p / rates +
+    # buffers)
+    n_tile = n_fault * n_sched
+    if n_tile > 1:
         def tile(a):
-            return jnp.concatenate([a] * n_sched, 0)
+            return jnp.concatenate([a] * n_tile, 0)
         xtr, ytr, xte, yte = map(tile, (xtr, ytr, xte, yte))
         lay = jax.tree.map(tile, lay)
         loop_keys = tile(loop_keys)
         params = jax.tree.map(tile, params)
         opt_state = jax.tree.map(tile, opt_state)
-    sched_state = _stacked_sched_state(impl, scheds, n_base)
-    lanes = tuple((nc, s) for _ in scheds for (nc, s) in base_lanes)
+    sched_state = _stacked_fault_state(impl, plans, scheds, n_base,
+                                       none_only)
+    lanes = tuple((nc, s) for _ in plans for _ in scheds
+                  for (nc, s) in base_lanes)
 
     round_fn = make_round_fn(model, opt, pcfg, n_train,
                              first_layer_fn=first, sched_impl=impl)
@@ -521,7 +606,8 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
                      loop_keys=loop_keys, xtr=xtr, ytr=ytr, xte=xte,
                      yte=yte, lay=lay, lanes=lanes, scheds=scheds,
                      sync_only=sync_only, n_train=n_train,
-                     n_base=n_base, width=width)
+                     n_base=n_base, width=width, plans=plans,
+                     none_only=none_only, impl=impl)
 
 
 def run_padded_cells(dataset, mode, scfg, shard="auto"):
@@ -537,14 +623,18 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     float, "steps_per_sec": float}.  For the default sync-only
     schedule axis the cell keys stay the historical bare ``n_clients``
     ints; a non-default schedule axis keys cells as
-    ``"{schedule}/{n_clients}"`` (e.g. ``"stale_k:2/3"``).  Each
-    cell_dict has the run_cell schema plus a ``"schedule"`` field --
-    except that wall_s is the SHARED batch wall and each cell's
-    steps_per_sec is its lanes' share of it (cells sum to the batch's
-    steps_per_sec).  round_traces counts actual retraces of the round
-    body -- 1 means the whole multi-count (and multi-schedule: k and
-    p are traced per-lane state) batch ran on one compile (pinned in
-    tests; ``repro.analysis``'s retrace pass proves the static side).
+    ``"{schedule}/{n_clients}"`` (e.g. ``"stale_k:2/3"``); a
+    non-default fault axis prepends the plan
+    (``"{fault}/{schedule}/{n_clients}"``).  Each cell_dict has the
+    run_cell schema plus ``"schedule"`` (and, under a fault axis,
+    ``"fault"`` + per-cell ``"fault_telemetry"`` event counts summed
+    over seeds) -- except that wall_s is the SHARED batch wall and
+    each cell's steps_per_sec is its lanes' share of it (cells sum to
+    the batch's steps_per_sec).  round_traces counts actual retraces
+    of the round body -- 1 means the whole multi-count (and
+    multi-schedule / multi-fault: k, p and fault rates are traced
+    per-lane state) batch ran on one compile (pinned in tests;
+    ``repro.analysis``'s retrace pass proves the static side).
     shard: "auto" (largest dividing device count) | False | int.
     """
     dataset, mode, scfg = _coerce_sweep_config(dataset, mode, scfg)
@@ -556,6 +646,7 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     loop_keys, xtr, ytr, xte, yte, lay = (lb.loop_keys, lb.xtr, lb.ytr,
                                           lb.xte, lb.yte, lb.lay)
     round_fn, lanes, sync_only = lb.round_fn, lb.lanes, lb.sync_only
+    plans, none_only = lb.plans, lb.none_only
     traces = 0
 
     def counted_round(*args):
@@ -576,9 +667,9 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
         make_predict_fn(lb.model, pcfg, first_layer_fn=lb.first)))
     vfold = jax.jit(jax.vmap(jax.random.fold_in, in_axes=(0, None)))
 
-    params, opt_state, losses, wall, timed_rounds = _train_rounds(
-        vround, vfold, params, opt_state, sched_state, loop_keys,
-        xtr, ytr, lay, pcfg.rounds)
+    params, opt_state, sched_state, losses, wall, timed_rounds = \
+        _train_rounds(vround, vfold, params, opt_state, sched_state,
+                      loop_keys, xtr, ytr, lay, pcfg.rounds)
 
     preds = np.asarray(vpred(params, xte, lay))   # [L, max_c, B_test]
     yte_np, ytr_np = np.asarray(yte), np.asarray(ytr)
@@ -588,33 +679,51 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
                                                       n_train).n_batches
     cells = {}
     s = len(scfg.seeds)
-    for si, sc in enumerate(scheds):
-        for ci, nc in enumerate(counts):
-            lo = si * n_base + ci * s
-            sl = slice(lo, lo + s)
-            cells[nc if sync_only else f"{sc.spec}/{nc}"] = {
-                "dataset": dataset, "mode": mode, "n_clients": nc,
-                "schedule": sc.spec,
-                "seeds": list(scfg.seeds),
-                "f1_per_seed": f1s[sl], "acc_per_seed": accs[sl],
-                "f1_mean": float(np.mean(f1s[sl])),
-                "f1_std": float(np.std(f1s[sl])),
-                "acc_mean": float(np.mean(accs[sl])),
-                "final_loss_mean": float(losses_np[sl, -1].mean()),
-                # the whole multi-count batch trains together, so
-                # wall_s is SHARED across this group's cells and each
-                # cell's steps_per_sec is its own lanes' steps over
-                # that shared wall (cells sum to the batch throughput
-                # -- do not read a single padded cell's rate as a
-                # run_cell-style standalone measurement)
-                "wall_s": wall,
-                "steps_per_sec": steps * s / max(wall, 1e-9),
-            }
-    return {"cells": cells, "round_traces": traces, "lanes": n_lanes,
-            "devices": n_dev, "wall_s": wall,
-            "schedules": [sc.spec for sc in scheds],
-            "cells_per_sec": len(cells) / max(wall, 1e-9),
-            "steps_per_sec": steps * n_lanes / max(wall, 1e-9)}
+    for fi, pl in enumerate(plans):
+        for si, sc in enumerate(scheds):
+            for ci, nc in enumerate(counts):
+                lo = (fi * len(scheds) + si) * n_base + ci * s
+                sl = slice(lo, lo + s)
+                if not none_only:
+                    ck = f"{pl.spec}/{sc.spec}/{nc}"
+                elif not sync_only:
+                    ck = f"{sc.spec}/{nc}"
+                else:
+                    ck = nc
+                cell = {
+                    "dataset": dataset, "mode": mode, "n_clients": nc,
+                    "schedule": sc.spec,
+                    "seeds": list(scfg.seeds),
+                    "f1_per_seed": f1s[sl], "acc_per_seed": accs[sl],
+                    "f1_mean": float(np.mean(f1s[sl])),
+                    "f1_std": float(np.std(f1s[sl])),
+                    "acc_mean": float(np.mean(accs[sl])),
+                    "final_loss_mean": float(losses_np[sl, -1].mean()),
+                    # the whole multi-count batch trains together, so
+                    # wall_s is SHARED across this group's cells and
+                    # each cell's steps_per_sec is its own lanes'
+                    # steps over that shared wall (cells sum to the
+                    # batch throughput -- do not read a single padded
+                    # cell's rate as a run_cell-style standalone
+                    # measurement)
+                    "wall_s": wall,
+                    "steps_per_sec": steps * s / max(wall, 1e-9),
+                }
+                if not none_only:
+                    cell["fault"] = pl.spec
+                    tel = lb.impl.telemetry(
+                        jax.tree.map(lambda a: a[sl], sched_state))
+                    cell["fault_telemetry"] = {
+                        k: int(np.sum(v)) for k, v in tel.items()}
+                cells[ck] = cell
+    out = {"cells": cells, "round_traces": traces, "lanes": n_lanes,
+           "devices": n_dev, "wall_s": wall,
+           "schedules": [sc.spec for sc in scheds],
+           "cells_per_sec": len(cells) / max(wall, 1e-9),
+           "steps_per_sec": steps * n_lanes / max(wall, 1e-9)}
+    if not none_only:
+        out["faults"] = [pl.spec for pl in plans]
+    return out
 
 
 def run_grid(scfg: SweepConfig = SweepConfig(), shard=None):

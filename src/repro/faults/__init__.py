@@ -1,0 +1,27 @@
+"""repro.faults -- deterministic fault injection, exchange guards,
+and divergence recovery for the federation (docs/ARCHITECTURE.md
+section 9).
+
+Spec strings ("crash:0.2+corrupt:0.05", "straggle:0.5:2", ...) parse
+into :class:`FaultPlan` records; :func:`make_fault_impl` wraps the
+resolved schedule impl so injected adversity rides the scan carry as
+traced state (compile-once, sweepable as a lane axis); the guard
+screen lives in :func:`repro.core.exchange.screen_exchange`;
+:class:`RetryPolicy` drives Session.run's rollback-and-reseed
+watchdog.  ``fault="none"`` never touches the engine: the protocol
+returns its legacy code path unwrapped, bit for bit.
+"""
+from repro.faults.engine import (CORRUPT_SCALE, FAULT_TAG, GUARD_MAX,
+                                 FaultImpl, make_fault_impl)
+from repro.faults.recovery import (RESEED_TAG, DivergenceError,
+                                   RetryPolicy, diverged)
+from repro.faults.registry import (FAULTS, FaultEntry, FaultPlan,
+                                   fault_names, get_fault_plan,
+                                   register_fault)
+
+__all__ = [
+    "CORRUPT_SCALE", "FAULT_TAG", "GUARD_MAX", "RESEED_TAG",
+    "DivergenceError", "FAULTS", "FaultEntry", "FaultImpl",
+    "FaultPlan", "RetryPolicy", "diverged", "fault_names",
+    "get_fault_plan", "make_fault_impl", "register_fault",
+]

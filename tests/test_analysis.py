@@ -202,13 +202,21 @@ def test_retrace_static_round_traces():
 
 
 def test_audit_combos_merges_and_stamps():
+    # the default fault axis appends one hot composite plan per
+    # schedule (devertifl only), after the fault-free combos
     rep = audit_combos(modes=("devertifl",),
                        schedules=("sync", "stale_k:1"),
                        first_layers=("masked",),
                        passes=("taint", "retrace"), lane_check=False)
-    assert len(rep.combos) == 2
+    assert len(rep.combos) == 4
+    assert sum("crash" in c for c in rep.combos) == 2
     assert not rep.violations, rep.summary()
     assert rep.static_round_traces == 1
+    narrow = audit_combos(modes=("devertifl",),
+                          schedules=("sync",),
+                          first_layers=("masked",), faults=("none",),
+                          passes=("taint",), lane_check=False)
+    assert len(narrow.combos) == 1
 
 
 # ---------------------------------------------------------------------------

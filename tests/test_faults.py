@@ -1,0 +1,519 @@
+"""The repro.faults fault-injection / guard / recovery subsystem.
+
+Contracts pinned here (docs/ARCHITECTURE.md section 9):
+
+  * fault spec parsing/canonicalization and the registry's actionable
+    errors (+ register_fault extension)
+  * fault="none" IS the legacy engine (spec hashes pinned against the
+    pre-fault values; no fault telemetry in timings), and non-none
+    plans fork spec/resume hashes
+  * injected faults are deterministic (same spec -> bitwise the same
+    trajectory), padding-invariant, and identical across the scan and
+    python engines
+  * the exchange guard screens corrupted payloads: corrupt:1.0 runs
+    keep every loss finite, quarantine exactly the corrupted
+    client-rounds, and drop them from FedAvg
+  * fault x schedule x count sweep lanes compile ONCE
+    (round_traces == 1) with the "none" lanes bitwise equal to the
+    fault-free sweep
+  * the divergence watchdog rolls back to the last good state and
+    retries under a reseeded key; exhausted retries raise
+    DivergenceError with the knobs to turn
+  * resume() skips corrupt/truncated checkpoints to the newest intact
+    one, and a checkpoint's schedule|fault stream stamp refuses
+    cross-plan resumes
+  * metrics refuse non-finite inputs instead of scoring them
+  * the static auditor stays clean over faulted combos
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build, run_grid, spec_grid
+from repro.core.exchange import screen_exchange
+from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
+from repro.core.sweep import SweepConfig, run_cell, run_padded_cells
+from repro.faults import (GUARD_MAX, RESEED_TAG, DivergenceError,
+                          RetryPolicy, diverged, fault_names,
+                          get_fault_plan, make_fault_impl,
+                          register_fault)
+from repro.schedule import LaneScheduleImpl, get_schedule
+
+TINY = dict(dataset="titanic", n_clients=3, rounds=2, epochs=2, seed=0)
+# a composite plan exercising all three built-in families at once
+HOT = "crash:0.5:2+straggle:0.5:1+corrupt:0.5"
+
+
+def _traj(pcfg, engine=None):
+    r = DeVertiFL(pcfg).train(engine=engine)
+    return (np.concatenate([h["round_losses"] for h in r["history"]]),
+            np.array([h["f1"] for h in r["history"]]),
+            r["final"])
+
+
+# ---------------------------------------------------------------------------
+# a test-only custom fault: NaN-poisons the whole exchange for a round
+# when a coin drawn from the ROUND KEY comes up heads, so the only way
+# past it is the watchdog's reseeded retry (rolling back without
+# reseeding would replay the same coin forever)
+# ---------------------------------------------------------------------------
+_POISON_TAG = 0x0BAD
+
+
+class _PoisonImpl:
+    def __init__(self, inner, p):
+        self.inner, self.p = inner, p
+
+    def init_state(self, sched):
+        return {"inner": self.inner.init_state(sched),
+                "poison": jnp.zeros((), jnp.float32)}
+
+    def round_start(self, state, lay, key, round_idx):
+        inner, eff = self.inner.round_start(state["inner"], lay, key,
+                                            round_idx)
+        coin = jax.random.bernoulli(
+            jax.random.fold_in(key, _POISON_TAG), self.p)
+        return {"inner": inner,
+                "poison": coin.astype(jnp.float32)}, eff
+
+    def select(self, state, h_now):
+        h_ref, inner = self.inner.select(state["inner"], h_now)
+        h_ref = jnp.where(state["poison"] > 0,
+                          jnp.full_like(h_ref, jnp.nan), h_ref)
+        return h_ref, {**state, "inner": inner}
+
+    def round_end(self, state):
+        return {**state, "inner": self.inner.round_end(state["inner"])}
+
+
+register_fault(
+    "test_poison",
+    lambda inner, n_clients, batch_size, width, args: _PoisonImpl(
+        inner, float(args[0]) if args else 0.5),
+    overwrite=True)
+
+
+def _poison_draws(seed, p=0.5):
+    """Replay the session's key derivation for round 0: the canonical
+    round key and its attempt-1 reseed, each folded with the poison
+    tag -- (coin(attempt 0), coin(attempt 1))."""
+    _, loop_key = train_keys(jax.random.PRNGKey(seed))
+    rk0 = jax.random.fold_in(loop_key, 0)
+    rk1 = jax.random.fold_in(
+        jax.random.fold_in(rk0, RESEED_TAG), 1)
+
+    def coin(k):
+        return bool(jax.random.bernoulli(
+            jax.random.fold_in(k, _POISON_TAG), p))
+
+    return coin(rk0), coin(rk1)
+
+
+# ---------------------------------------------------------------------------
+# registry + parsing
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_fault_parsing_and_canonicalization():
+    assert get_fault_plan("none").is_none
+    p = get_fault_plan("crash:0.2")
+    assert (p.crash, p.crash_dur, p.spec) == (0.2, 1, "crash:0.2")
+    # default args normalize away; non-defaults survive
+    assert get_fault_plan("crash:0.2:1").spec == "crash:0.2"
+    assert get_fault_plan("crash:0.2:3").spec == "crash:0.2:3"
+    assert get_fault_plan("corrupt:0.05:nan").spec == "corrupt:0.05"
+    s = get_fault_plan("straggle:0.5:2")
+    assert (s.straggle, s.straggle_d, s.max_delay) == (0.5, 2, 2)
+    c = get_fault_plan("corrupt:0.05:scale")
+    assert (c.corrupt, c.corrupt_kind) == (0.05, "scale")
+    # composition canonicalizes to crash/straggle/corrupt order
+    combo = get_fault_plan("corrupt:0.1+crash:0.3")
+    assert combo.spec == "crash:0.3+corrupt:0.1"
+    assert (combo.crash_p, combo.straggle_p, combo.corrupt_p) == \
+        (0.3, 0.0, 0.1)
+    assert (combo.max_dur, combo.max_delay) == (1, 0)
+    assert not combo.is_none
+    # FaultPlan objects pass through
+    assert get_fault_plan(combo) is combo
+    for name in ("none", "crash", "straggle", "corrupt",
+                 "test_poison"):
+        assert name in fault_names()
+
+
+@pytest.mark.fast
+def test_fault_parse_errors_are_actionable():
+    with pytest.raises(ValueError) as e:
+        get_fault_plan("gremlins:0.5")
+    for name in ("crash", "straggle", "corrupt"):
+        assert name in str(e.value)
+    for bad, frag in [("crash:0", "0 < p <= 1"),
+                      ("crash:1.5", "0 < p <= 1"),
+                      ("crash:0.2:0", "dur >= 1"),
+                      ("crash", "probability"),
+                      ("straggle:0.5", "delay"),
+                      ("straggle:0.5:0", "delay >= 1"),
+                      ("corrupt:0.1:flip", "'nan' or 'scale'"),
+                      ("corrupt:x", "float probability"),
+                      ("none:1", "no arguments"),
+                      ("none+crash:0.2", "compose"),
+                      ("test_poison:0.5+crash:0.2", "compose"),
+                      ("crash:0.2+crash:0.3", "duplicate"),
+                      ("+crash:0.2", "malformed")]:
+        with pytest.raises(ValueError, match=frag):
+            get_fault_plan(bad)
+
+
+# ---------------------------------------------------------------------------
+# spec integration + hash stability
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_none_spec_hash_unchanged_and_fault_forks():
+    """The fault field must not fork pre-existing spec ids (pinned
+    against the hashes recorded BEFORE the fault axis existed), while
+    non-none plans get their own ids and formatting cannot fork them."""
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=2,
+                          epochs=1)
+    assert spec.fault == "none"
+    assert spec.spec_hash == "58715f95206928f5"      # pre-PR-5 value
+    assert spec.resume_hash == "48945ac24cd700a7"    # pre-PR-5 value
+    hot = spec.replace(fault="crash:0.2")
+    assert hot.spec_hash != spec.spec_hash
+    assert hot.resume_hash != spec.resume_hash
+    assert spec.replace(fault="crash:0.2:1").spec_hash == hot.spec_hash
+    assert spec.replace(fault="corrupt:0.1:nan").spec_hash == \
+        spec.replace(fault="corrupt:0.1").spec_hash
+
+
+@pytest.mark.fast
+def test_spec_fault_validation():
+    with pytest.raises(ValueError) as e:
+        ExperimentSpec(dataset="titanic", fault="nope")
+    assert "crash" in str(e.value)
+    for mode in ("non_federated", "verticomb", "splitnn"):
+        with pytest.raises(ValueError, match="devertifl"):
+            ExperimentSpec(dataset="titanic", mode=mode,
+                           fault="crash:0.2")
+        # fault-free specs run everywhere
+        ExperimentSpec(dataset="titanic", mode=mode, fault="none")
+
+
+# ---------------------------------------------------------------------------
+# guard + fault-layer unit contracts
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_screen_exchange_quarantines_bad_slices():
+    payload = jnp.stack([jnp.full((2, 3), jnp.nan),
+                         jnp.full((2, 3), 2.0 * GUARD_MAX),
+                         jnp.ones((2, 3))])
+    last_good = jnp.full((3, 2, 3), 7.0)
+    screened, bad = screen_exchange(payload, last_good, GUARD_MAX)
+    np.testing.assert_array_equal(np.asarray(bad),
+                                  [True, True, False])
+    # bad slices are REPLACED (masking after the sum would still
+    # poison it: NaN * 0.0 is NaN), good ones untouched
+    np.testing.assert_array_equal(np.asarray(screened[0]),
+                                  np.full((2, 3), 7.0))
+    np.testing.assert_array_equal(np.asarray(screened[1]),
+                                  np.full((2, 3), 7.0))
+    np.testing.assert_array_equal(np.asarray(screened[2]),
+                                  np.ones((2, 3)))
+    assert np.isfinite(np.asarray(screened)).all()
+
+
+@pytest.mark.fast
+def test_fedavg_mask_drops_quarantined_with_fallback():
+    inner = LaneScheduleImpl(0, 3, 4, 5)
+    impl = make_fault_impl(get_fault_plan("corrupt:0.5"), inner,
+                           3, 4, 5)
+    st = impl.init_state(get_schedule("sync"))
+    eff = jnp.ones((3,), jnp.float32)
+    st = {**st, "quar": jnp.asarray([1.0, 0.0, 0.0], jnp.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(impl.fedavg_mask(st, eff)), [0.0, 1.0, 1.0])
+    # all-quarantined rounds fall back to the unmasked round (an
+    # all-zero FedAvg weighting would zero the params)
+    st = {**st, "quar": jnp.ones((3,), jnp.float32)}
+    np.testing.assert_array_equal(
+        np.asarray(impl.fedavg_mask(st, eff)), np.asarray(eff))
+    # an impl sized for a shallow ring refuses deeper plans
+    with pytest.raises(ValueError, match="straggler ring"):
+        impl.init_state(get_schedule("sync"),
+                        plan=get_fault_plan("straggle:0.5:3"))
+
+
+@pytest.mark.fast
+def test_retry_policy_validation_and_backoff():
+    p = RetryPolicy(max_retries=3, backoff=1.0, backoff_cap=3.0)
+    assert (p.sleep_s(1), p.sleep_s(2), p.sleep_s(3)) == \
+        (1.0, 2.0, 3.0)                          # capped exponential
+    assert RetryPolicy().sleep_s(5) == 0.0       # default: no sleep
+    for kw in (dict(max_retries=-1), dict(backoff=-1.0),
+               dict(loss_threshold=0.0)):
+        with pytest.raises(ValueError):
+            RetryPolicy(**kw)
+    assert diverged([1.0, np.nan], 1e4)
+    assert diverged([1.0, -2e4], 1e4)
+    assert not diverged([1.0, 2.0], 1e4)
+
+
+@pytest.mark.fast
+def test_metrics_refuse_nonfinite():
+    from repro.metrics.classification import accuracy, f1_score
+    y = np.array([0, 1, 1, 0])
+    assert accuracy(y, y) == 1.0
+    bad = np.array([0.0, np.nan, 1.0, np.inf])
+    with pytest.raises(ValueError,
+                       match="y_pred contains 2 non-finite"):
+        accuracy(y, bad)
+    with pytest.raises(ValueError, match="y_true"):
+        f1_score(bad, y)
+    # finite floats (and integer labels, always) pass
+    assert f1_score(y.astype(np.float32),
+                    y.astype(np.float32)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# injection determinism + engine/padding equivalences
+# ---------------------------------------------------------------------------
+def test_fault_injection_deterministic_and_differs_from_none():
+    """Same plan -> bitwise the same trajectory (fold_in coins); a hot
+    plan actually changes the trajectory; the guard keeps every loss
+    finite through it."""
+    hot = ProtocolConfig(fault="crash:0.5:2+corrupt:0.5", **TINY)
+    l1, f1, fin1 = _traj(hot)
+    l2, f2, fin2 = _traj(hot)
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(f1, f2)
+    assert fin1 == fin2
+    l0, _, _ = _traj(ProtocolConfig(**TINY))
+    assert not np.array_equal(l0, l1)
+    assert np.isfinite(l1).all()
+
+
+def test_fault_padding_invariance():
+    """A padded federation draws the same fates for its live clients
+    as its unpadded twin: per-slot fold_in coins, dead slots masked."""
+    hot = ProtocolConfig(fault=HOT, **TINY)
+    l0, _, fin0 = _traj(hot)
+    l1, _, fin1 = _traj(hot.replace(max_clients=6))
+    np.testing.assert_array_equal(l0, l1)
+    assert fin0 == fin1
+
+
+@pytest.mark.parametrize("fault,sched", [
+    ("crash:0.5", "sync"),
+    ("straggle:0.7:2", "sync"),
+    (HOT, "stale_k:2"),
+])
+def test_scan_matches_python_engine_under_faults(fault, sched):
+    pcfg = ProtocolConfig(schedule=sched, fault=fault, **TINY)
+    l_scan, f_scan, fin_scan = _traj(pcfg, engine="scan")
+    l_py, f_py, fin_py = _traj(pcfg, engine="python")
+    np.testing.assert_array_equal(l_scan, l_py)
+    np.testing.assert_array_equal(f_scan, f_py)
+    assert fin_scan == fin_py
+
+
+# ---------------------------------------------------------------------------
+# the exchange guard end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["nan", "scale"])
+def test_corrupt_guard_quarantines_and_losses_stay_finite(kind):
+    """corrupt:1.0 poisons every client's payload every round; the
+    guard quarantines all of them (telemetry counts client-rounds),
+    losses and metrics stay finite, and the watchdog never trips."""
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=2,
+                          epochs=1, seeds=(0,),
+                          fault=f"corrupt:1.0:{kind}")
+    res = build(spec).run()
+    tel = res.timings["fault"]
+    assert tel["corruptions"] == 3 * 2       # every client, every round
+    assert tel["quarantined"] == tel["corruptions"]
+    assert tel["crashes"] == tel["straggles"] == 0
+    assert (tel["watchdog_trips"], tel["retries"]) == (0, 0)
+    losses = np.concatenate([h["round_losses"] for h in res.history])
+    assert np.isfinite(losses).all()
+    assert np.isfinite(res.metrics["f1"])
+
+
+def test_none_keeps_legacy_path_without_fault_timings():
+    res = build(ExperimentSpec(dataset="titanic", n_clients=2,
+                               rounds=1, epochs=1, seeds=(0,))).run()
+    assert "fault" not in res.timings
+
+
+# ---------------------------------------------------------------------------
+# fault lanes in the sweep engine
+# ---------------------------------------------------------------------------
+def test_fault_grid_compiles_once_and_none_lane_is_exact():
+    """A faults x schedules x counts batch compiles its round ONCE
+    (rates/durations/kind are traced per-lane state), its "none" lanes
+    equal the fault-free sweep bitwise, and its faulted cells carry
+    telemetry."""
+    counts, seeds = (2, 3), (0,)
+    scheds = ("sync", "stale_k:1")
+    faults = ("none", "crash:0.5:2+corrupt:0.5")
+    out = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=counts, seeds=seeds, rounds=2,
+                    epochs=1, schedules=scheds, faults=faults))
+    assert out["round_traces"] == 1, out
+    assert out["lanes"] == \
+        len(faults) * len(scheds) * len(counts) * len(seeds)
+    assert set(out["cells"]) == {f"{f}/{sc}/{nc}" for f in faults
+                                 for sc in scheds for nc in counts}
+    assert out["faults"] == list(faults)
+    ref = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=counts, seeds=seeds, rounds=2,
+                    epochs=1, schedules=scheds))
+    for sc in scheds:
+        for nc in counts:
+            assert out["cells"][f"none/{sc}/{nc}"]["f1_per_seed"] == \
+                ref["cells"][f"{sc}/{nc}"]["f1_per_seed"]
+            assert out["cells"][f"none/{sc}/{nc}"]["final_loss_mean"] \
+                == ref["cells"][f"{sc}/{nc}"]["final_loss_mean"]
+    hot = out["cells"]["crash:0.5:2+corrupt:0.5/stale_k:1/3"]
+    assert hot["fault"] == "crash:0.5:2+corrupt:0.5"
+    tel = hot["fault_telemetry"]
+    assert set(tel) == {"crashes", "straggles", "corruptions",
+                        "quarantined"}
+    assert tel["quarantined"] == tel["corruptions"]
+
+
+def test_fault_sweep_rejects_bad_combinations():
+    base = dict(client_counts=(2,), seeds=(0,), rounds=1, epochs=1)
+    with pytest.raises(ValueError, match="one fault plan"):
+        run_cell("titanic", "devertifl", 2,
+                 SweepConfig(faults=("none", "crash:0.2"), **base))
+    with pytest.raises(ValueError, match="devertifl"):
+        run_padded_cells("titanic", "non_federated",
+                         SweepConfig(faults=("crash:0.2",), **base))
+    with pytest.raises(ValueError, match="custom fault plans"):
+        run_padded_cells("titanic", "devertifl",
+                         SweepConfig(faults=("test_poison:0.5",),
+                                     **base))
+
+
+def test_spec_grid_fault_axis_and_run_grid_keys():
+    """spec_grid grows a faults axis; run_grid prepends the plan to
+    non-default cell keys and stamps spec hashes."""
+    specs = spec_grid(datasets=("titanic",), modes=("devertifl",),
+                      client_counts=(2,), seeds=(0,),
+                      faults=("none", "crash:0.5"), rounds=1, epochs=1)
+    assert len(specs) == 2
+    assert [s.fault for s in specs] == ["none", "crash:0.5"]
+    grid = run_grid(specs)
+    assert set(grid["cells"]) == {"titanic/devertifl/none/sync/2",
+                                  "titanic/devertifl/crash:0.5/sync/2"}
+    for cell in grid["cells"].values():
+        assert cell["spec_hash"]
+
+
+# ---------------------------------------------------------------------------
+# divergence recovery
+# ---------------------------------------------------------------------------
+def test_watchdog_rolls_back_and_reseeds_past_a_poisoned_round():
+    """Pick a seed whose poison coin is heads on the canonical round
+    key and tails on the attempt-1 reseed: the run must trip once,
+    roll back, retry reseeded, and finish finite."""
+    seed = next(s for s in range(64)
+                if _poison_draws(s) == (True, False))
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=1,
+                          epochs=1, seeds=(seed,),
+                          fault="test_poison:0.5")
+    res = build(spec).run(retry=RetryPolicy(max_retries=2))
+    assert res.timings["fault"] == {"watchdog_trips": 1, "retries": 1}
+    losses = np.concatenate([h["round_losses"] for h in res.history])
+    assert np.isfinite(losses).all()
+    assert np.isfinite(res.metrics["f1"])
+
+
+def test_divergence_error_when_retries_exhaust():
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=1,
+                          epochs=1, seeds=(0,),
+                          fault="test_poison:1.0")
+    with pytest.raises(DivergenceError, match="reseeded"):
+        build(spec).run(retry=RetryPolicy(max_retries=1))
+    with pytest.raises(TypeError, match="RetryPolicy"):
+        build(spec).run(retry=42)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint hardening + stream stamps
+# ---------------------------------------------------------------------------
+def test_fault_checkpoint_resume_bitwise_and_stamp_refusal(tmp_path):
+    """resume() restores fault state (countdowns, rings, last-good
+    buffers) bitwise, and the schedule|fault stream stamp refuses
+    resuming under a different plan with an error naming both."""
+    d = str(tmp_path / "ckpt")
+    kw = dict(dataset="titanic", epochs=1, seeds=(0,),
+              schedule="stale_k:1", fault=HOT)
+    full = build(ExperimentSpec(rounds=4, **kw)).run()
+    build(ExperimentSpec(rounds=2, checkpoint_dir=d,
+                         checkpoint_every=1, **kw)).run()
+    res = build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                               checkpoint_every=1, **kw)).resume()
+    assert res.resumed_from == 2
+    assert res.metrics == full.metrics
+    for i, r in enumerate((2, 3)):
+        np.testing.assert_array_equal(res.history[i]["round_losses"],
+                                      full.history[r]["round_losses"])
+    for other in ("crash:0.5", "none"):
+        with pytest.raises(
+                ValueError,
+                match="different exchange schedule or fault plan"):
+            build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                                 checkpoint_every=1,
+                                 **{**kw, "fault": other})).resume()
+
+
+def test_resume_skips_corrupt_checkpoints_to_newest_intact(tmp_path):
+    """A truncated newest checkpoint is skipped with a warning and
+    resume falls back to the next older intact step -- bitwise the
+    uninterrupted run; with EVERY checkpoint corrupt it warns and
+    trains from scratch."""
+    d = str(tmp_path / "ckpt")
+    kw = dict(dataset="titanic", epochs=1, seeds=(0,),
+              fault="crash:0.5+corrupt:0.5")
+    full = build(ExperimentSpec(rounds=4, **kw)).run()
+    build(ExperimentSpec(rounds=3, checkpoint_dir=d,
+                         checkpoint_every=1, **kw)).run()
+    newest = os.path.join(d, "session_00000003.npz")
+    assert os.path.exists(newest)
+    with open(newest, "r+b") as f:
+        f.truncate(40)
+    with pytest.warns(RuntimeWarning, match="skipping corrupt"):
+        res = build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                                   checkpoint_every=1, **kw)).resume()
+    assert res.resumed_from == 2
+    assert res.metrics == full.metrics
+    # the resumed run above re-wrote steps 3-4; corrupt EVERYTHING
+    for fn in os.listdir(d):
+        with open(os.path.join(d, fn), "r+b") as f:
+            f.truncate(10)
+    with pytest.warns(RuntimeWarning, match="training from scratch"):
+        res2 = build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                                    checkpoint_every=1, **kw)).resume()
+    assert res2.resumed_from is None
+    assert res2.metrics == full.metrics
+
+
+# ---------------------------------------------------------------------------
+# the static auditor over faulted combos
+# ---------------------------------------------------------------------------
+def test_audit_faulted_combo_is_clean():
+    """Taint (per-slot separation through guard select_n's), deadness
+    (padded slots stay dead under injected faults), and retrace (fault
+    state rides the carry) all hold on a hot composite plan."""
+    from repro.analysis.audit import audit
+    pcfg = ProtocolConfig(dataset="titanic", n_clients=3, rounds=1,
+                          epochs=1, seed=0, schedule="stale_k:2",
+                          fault="crash:0.2:2+straggle:0.5:2"
+                                "+corrupt:0.05")
+    rep = audit(pcfg, lane_check=False)
+    assert rep.ok, rep.summary()
+    assert rep.static_round_traces == 1
+    assert rep.channels.get("fault", 0) > 0
