@@ -17,8 +17,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast perf-regression canary (~1 min): runs ONLY "
                          "the protocol lane (engine + schedule + sweep "
-                         "throughput), the staleness schedule sweep, and "
-                         "the fault-tolerance sweep at toy sizes and "
+                         "throughput), the staleness schedule sweep, the "
+                         "fault-tolerance sweep, and the serving "
+                         "offered-load sweep at toy sizes and "
                          "skips the figures, table2, kernels, roofline, "
                          "and ablations lanes; nothing is written to "
                          "benchmarks/results/. Paired with the 'fast' "
@@ -26,17 +27,18 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of lanes to run: figures,table2,"
                          "kernels,roofline,ablations,protocol,staleness,"
-                         "faults (default: all; incompatible with "
-                         "--smoke)")
+                         "faults,serving (default: all; incompatible "
+                         "with --smoke)")
     args = ap.parse_args()
     which = set((args.only or
                  "figures,table2,kernels,roofline,ablations,protocol,"
-                 "staleness,faults,analysis").split(","))
+                 "staleness,faults,serving,analysis").split(","))
     if args.smoke:
         if args.only:
             ap.error("--smoke runs only the protocol + staleness + "
-                     "faults + analysis lanes; drop --only")
-        which = {"protocol", "staleness", "faults", "analysis"}
+                     "faults + serving + analysis lanes; drop --only")
+        which = {"protocol", "staleness", "faults", "serving",
+                 "analysis"}
 
     rows = []
     t0 = time.time()
@@ -66,6 +68,9 @@ def main() -> None:
     if "faults" in which:
         from benchmarks import faults
         rows += faults.run(smoke=args.smoke)
+    if "serving" in which:
+        from benchmarks import serving
+        rows += serving.run(smoke=args.smoke)
     if "kernels" in which:
         from benchmarks import kernels_bench
         rows += kernels_bench.run()

@@ -1,0 +1,168 @@
+"""Federated serving under offered load: latency and throughput of
+``Session.serve()``'s continuous-batched vertical inference as the
+arrival rate and slot-pool size vary.
+
+Each cell replays the SAME request stream (seeded entity draws from a
+hot-entity pool, so repeat entities exercise the exchange cache)
+against one :class:`repro.serving.FederatedServer` per slot count at a
+wall-clock arrival schedule: requests are submitted when their arrival
+time passes, the slot pool steps continuously, and per-request
+telemetry (submit -> done) yields p50/p99 latency, throughput, and the
+cache hit rate.  The server is REUSED across load levels so the cell
+grid demonstrates the one-compile contract: ``step_traces == 1`` per
+(max_slots, spec) configuration no matter how many cells ran through
+it (recorded per slot count in the entry).
+
+Results append to ``benchmarks/results/BENCH_serving.json`` (same
+append-only rules as BENCH_protocol.json), one dated git-SHA-keyed
+entry per run, spec_hash-stamped.
+
+Run:    PYTHONPATH=src python -m benchmarks.serving
+Smoke:  PYTHONPATH=src python -m benchmarks.serving --smoke
+        (toy sizes, no result-file write unless --out is given; the
+        scripts/ci.sh serving-smoke lane runs this with a throwaway
+        --out)
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.protocol_bench import RESULTS, _append_entry
+from repro.api import ExperimentSpec, ServeRequest, build, git_sha, \
+    split_features
+
+FULL = dict(dataset="mnist", n_clients=3, rounds=3, epochs=2,
+            n_samples=2000, n_requests=192, entity_pool=64,
+            loads_rps=(200.0, 1000.0, 5000.0), slot_counts=(4, 16))
+SMOKE = dict(dataset="mnist", n_clients=3, rounds=1, epochs=1,
+             n_samples=512, n_requests=36, entity_pool=12,
+             loads_rps=(200.0, 1000.0, 4000.0), slot_counts=(4,))
+
+
+def make_stream(cfg, rng):
+    """The request stream every cell replays: row indices and entity
+    ids drawn from a bounded hot-entity pool (pool < stream length, so
+    repeats exercise the cache)."""
+    ents = rng.integers(0, cfg["entity_pool"], cfg["n_requests"])
+    return [(int(e), f"entity-{e}") for e in ents]
+
+
+def drive_cell(srv, layout, xte, stream, rate_rps, tag):
+    """Replay ``stream`` against ``srv`` at ``rate_rps`` offered load
+    (arrival time i/rate), stepping the pool continuously; return the
+    cell's latency/throughput/cache metrics from the telemetry added
+    during this cell only."""
+    tele_start = len(srv.telemetry)
+    hits0 = srv.cache.hits if srv.cache else 0
+    miss0 = srv.cache.misses if srv.cache else 0
+    arrivals = np.arange(len(stream)) / rate_rps
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(stream) or srv.queued or srv.occupancy:
+        now = time.perf_counter() - t0
+        while i < len(stream) and arrivals[i] <= now:
+            row, entity = stream[i]
+            srv.submit(ServeRequest(
+                uid=f"{tag}-{i}", entity_id=f"{tag}:{entity}",
+                slices=split_features(layout, xte[row])))
+            i += 1
+        if srv.step() == 0 and i < len(stream):
+            # pool idle, next arrival not due yet: sleep toward it
+            wait = arrivals[i] - (time.perf_counter() - t0)
+            if wait > 0:
+                time.sleep(min(wait, 1e-3))
+    tele = srv.telemetry[tele_start:]
+    lat = np.asarray([t["latency_s"] for t in tele])
+    wall = max(t["t_done"] for t in tele) - min(t["t_submit"]
+                                                for t in tele)
+    hits = (srv.cache.hits - hits0) if srv.cache else 0
+    misses = (srv.cache.misses - miss0) if srv.cache else 0
+    return {
+        "offered_rps": rate_rps,
+        "n_requests": len(tele),
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "mean_ms": float(lat.mean() * 1e3),
+        "throughput_rps": len(tele) / wall if wall > 0 else 0.0,
+        "cache_hit_rate": hits / (hits + misses) if hits + misses
+        else 0.0,
+    }
+
+
+def run(smoke=False, results_path=None):
+    """Train the serving spec once, sweep offered load x slot count
+    over the same seeded request stream, append the entry, return
+    bench CSV rows.  smoke=True shrinks to toy sizes and (unless
+    results_path is given) skips the file write."""
+    cfg = SMOKE if smoke else FULL
+    spec = ExperimentSpec(
+        dataset=cfg["dataset"], mode="devertifl",
+        n_clients=cfg["n_clients"], rounds=cfg["rounds"],
+        epochs=cfg["epochs"], n_samples=cfg["n_samples"], eval_every=0)
+    sess = build(spec)
+    sess.run()
+    layout = sess.federation.layout
+    xte = np.asarray(sess.federation.xte)
+    stream = make_stream(cfg, np.random.default_rng(0))
+
+    cells, rows, traces = {}, [], {}
+    for S in cfg["slot_counts"]:
+        # ONE server (one compiled step) serves every load level at
+        # this slot count; entity namespaces are per-cell so each
+        # cell's hit rate reflects its own stream's repeats
+        srv = sess.server(max_slots=S,
+                          cache=2 * cfg["entity_pool"])
+        for rate in cfg["loads_rps"]:
+            tag = f"load{rate:g}/slots{S}"
+            cells[tag] = drive_cell(srv, layout, xte, stream, rate,
+                                    tag)
+            c = cells[tag]
+            rows.append((f"serving/{tag}", f"{c['p50_ms']*1e3:.0f}",
+                         f"p99={c['p99_ms']:.2f}ms_thr="
+                         f"{c['throughput_rps']:.0f}rps_hit="
+                         f"{c['cache_hit_rate']:.2f}"))
+        traces[str(S)] = srv.step_traces
+        if srv.step_traces != 1:
+            raise AssertionError(
+                f"slot pool {S} retraced: step_traces="
+                f"{srv.step_traces} (expected exactly 1 compile per "
+                "(max_slots, spec) configuration)")
+
+    entry = {
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "config": {k: v for k, v in cfg.items()},
+        "spec_hash": spec.spec_hash,
+        "step_traces": traces,       # per slot count; all must be 1
+        "cells": cells,
+    }
+    if results_path is None and not smoke:
+        os.makedirs(RESULTS, exist_ok=True)
+        results_path = os.path.join(RESULTS, "BENCH_serving.json")
+    if results_path is not None:
+        _append_entry(entry, results_path)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Offered-load x slot-count serving sweep (appends "
+                    "to BENCH_serving.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, no result-file write")
+    ap.add_argument("--out", default=None,
+                    help="write the entry to this path instead of "
+                         "benchmarks/results/ (CI smoke uses a "
+                         "throwaway file)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke, results_path=args.out):
+        print(",".join(str(x) for x in r))

@@ -6,19 +6,25 @@
 #   scripts/ci.sh examples        # examples smoke (reduced configs)
 #   scripts/ci.sh schedule-smoke  # exchange-schedule suite + bench
 #   scripts/ci.sh fault-smoke     # fault-injection suite + bench + audit
+#   scripts/ci.sh serving-smoke   # federated serving suite + bench
 #
 # Lanes: fast (the `fast` pytest marker suite), bench
 # (benchmarks/run.py --smoke: protocol engine + schedule + sweep
-# throughput and the staleness + fault sweeps at toy sizes, no
-# result-file writes), schedule-smoke (tests/test_schedule.py -- the
-# repro.schedule subsystem: sync bitwise pins, stale/double-buffer/
+# throughput and the staleness + fault + serving sweeps at toy sizes,
+# no result-file writes), schedule-smoke (tests/test_schedule.py --
+# the repro.schedule subsystem: sync bitwise pins, stale/double-buffer/
 # partial rounds, schedule lane sweeps), fault-smoke
 # (tests/test_faults.py -- the repro.faults subsystem: fault="none"
 # bitwise pins, crash/straggle/corrupt determinism, guard quarantine,
 # rollback-retry recovery -- plus the faults bench smoke and a static
-# audit over a faulted combo subset), examples
-# (examples/quickstart.py, examples/federated_training.py --smoke and
-# examples/staleness_sweep.py -- keeps the spec-driven README
+# audit over a faulted combo subset), serving-smoke
+# (tests/test_serving.py + tests/test_serving_engine.py -- the
+# serve()==predict() bitwise parity pin, slot-scheduler property
+# suite, and the legacy LM engine -- plus the offered-load serving
+# bench at toy sizes writing a throwaway BENCH_serving.json),
+# examples (examples/quickstart.py, examples/federated_training.py
+# --smoke, examples/staleness_sweep.py and examples/serving.py
+# --smoke -- keeps the spec-driven README
 # snippets from rotting), analysis (python -m repro.analysis: the
 # static taint/deadness/retrace audit over the full registered
 # mode x schedule x first-layer x fault grid; exits 1 on any unwaived
@@ -32,8 +38,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 LANES=("${@:-all}")
 for lane in "${LANES[@]}"; do
   case "$lane" in
-    all|fast|bench|schedule-smoke|fault-smoke|examples|analysis) ;;
-    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke examples analysis)" >&2
+    all|fast|bench|schedule-smoke|fault-smoke|serving-smoke|examples|analysis) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke serving-smoke examples analysis)" >&2
        exit 2 ;;
   esac
 done
@@ -75,6 +81,16 @@ if want fault-smoke; then
     --no-lane-check
 fi
 
+if want serving-smoke; then
+  echo "== tests/test_serving.py + tests/test_serving_engine.py (serving suites) =="
+  python -m pytest -q tests/test_serving.py tests/test_serving_engine.py
+  echo "== benchmarks/serving.py --smoke =="
+  # --out exercises the BENCH_serving.json append path without
+  # touching benchmarks/results/ (-u: fresh name, no pre-created
+  # empty file for the append reader to quarantine)
+  python -m benchmarks.serving --smoke --out "$(mktemp -u)"
+fi
+
 if want analysis; then
   echo "== python -m repro.analysis (static audit, full grid) =="
   python -m repro.analysis -q --out /dev/null
@@ -85,6 +101,7 @@ if want examples; then
   python examples/quickstart.py
   python examples/federated_training.py --smoke
   python examples/staleness_sweep.py
+  python examples/serving.py --smoke
 fi
 
 echo "ci.sh: all green (${LANES[*]})"

@@ -43,6 +43,10 @@ from repro.data.registry import (  # noqa: F401
 from repro.schedule import (  # noqa: F401
     Schedule, get_schedule, register_schedule, schedule_names,
 )
+from repro.serving.federated import (  # noqa: F401
+    ExchangeCache, FederatedServer, ServeReport, ServeRequest,
+    split_features,
+)
 
 
 def first_layer_names() -> list:

@@ -390,6 +390,56 @@ class Session:
         return self._runner.predict(params, x)
 
     # ------------------------------------------------------------------
+    def server(self, params=None, *, max_slots=8, queue_cap=None,
+               cache=128, overflow="reject"):
+        """A :class:`repro.serving.FederatedServer` over this spec's
+        trained params: continuous-batched vertical inference where
+        each request's features arrive split across clients
+        (``submit``/``offer``), batched into ``max_slots`` predict
+        slots advanced by one jitted step, with a hot-entity exchange
+        cache (LRU of ``cache`` entries keyed by entity id +
+        spec_hash; pass an ExchangeCache to share one across servers,
+        or ``None`` to disable) and bounded-queue admission
+        (``queue_cap`` + ``overflow``: "reject" | "evict_oldest").
+
+        Serving is bit-for-bit ``predict()`` per request -- invariant
+        to arrival order, slot count, batch composition, and cache
+        state (tests/test_serving.py pins it; contracts in
+        docs/ARCHITECTURE.md section 10).  Like ``evaluate``, serving
+        always uses the synchronous evaluation exchange regardless of
+        the training ``schedule``/``fault`` plan."""
+        from repro.serving.federated import FederatedServer
+        if self.mode.kind != "federated":
+            raise ValueError(
+                f"serve() runs federated modes; mode {self.spec.mode!r}"
+                " has no multi-party inference path")
+        params = params if params is not None else self._last_params
+        if params is None:
+            if len(self.spec.seeds) > 1:
+                raise ValueError(
+                    "multi-seed cells do not retain per-seed params; "
+                    "run a single-seed session (seeds=(s,)) for "
+                    "serve(), or pass params= explicitly")
+            raise ValueError("serve() before run()/resume(): pass "
+                             "params= or train first")
+        fed = self.federation
+        return FederatedServer(fed.model, fed.pcfg, fed.layout, params,
+                               spec_hash=self.spec.spec_hash,
+                               max_slots=max_slots, queue_cap=queue_cap,
+                               cache=cache, overflow=overflow)
+
+    def serve(self, requests, params=None, **server_kw):
+        """Batch convenience over :meth:`server`: submit every
+        :class:`repro.serving.ServeRequest` in arrival order, drain the
+        slot pool, and return the :class:`repro.serving.ServeReport`
+        (per-request predictions + latency/cache/scheduler telemetry).
+        """
+        srv = self.server(params, **server_kw)
+        for req in requests:
+            srv.submit(req)
+        return srv.run()
+
+    # ------------------------------------------------------------------
     def _retry_policy(self, retry) -> Optional[RetryPolicy]:
         """Resolve the run()/resume() ``retry`` argument to a
         RetryPolicy or None.  "auto" arms the default policy exactly

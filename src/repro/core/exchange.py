@@ -107,6 +107,26 @@ def screen_exchange(payload, last_good, max_abs):
     return jnp.where(sel, last_good, payload), bad
 
 
+def select_cached_exchange(h_fresh, h_cached, use_cached):
+    """Serving-path cache splice (repro.serving.federated): per-slot
+    SELECT between a freshly computed exchange-point stack and one
+    served from the hot-entity cache.
+
+    ``h_fresh``/``h_cached`` are [n_clients, S, W] slot stacks;
+    ``use_cached`` is a [S] 0/1 gate (client_mask-style: a traced
+    runtime value, never a python branch, so the slot count and cache
+    state can vary per step without retracing).  ``jnp.where`` is an
+    exact element select -- a slot with gate 0 gets ``h_fresh``'s bits
+    untouched and a slot with gate 1 gets the cached bits untouched --
+    which is the whole bitwise-parity story for the serving cache: a
+    cached stack was itself captured from this select's output on an
+    earlier step, and everything downstream (exchange sum, rest-of-
+    network, argmax) is per-row, so cache on/off cannot change a
+    single bit of any request's prediction."""
+    sel = use_cached[None, :, None] != 0
+    return jnp.where(sel, h_cached, h_fresh)
+
+
 def fedavg(stacked_params, client_mask=None):
     """P2P weight exchange + FedAvg (Algorithm 1 lines 16-19): every
     client receives every peer's weights and averages. stacked_params

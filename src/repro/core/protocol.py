@@ -692,13 +692,15 @@ def make_round_fn(model, opt, pcfg, n_train, fedavg_fn=None, layout=None,
     return round_fn
 
 
-def make_predict_fn(model, pcfg, layout=None, first_layer_fn=None):
-    """predict(params, x, lay) -> [n_clients, B] class predictions.
-    x is in canonical column order (Layout.apply).  Dead padded
-    clients' rows are garbage -- callers average metrics over the live
-    prefix only."""
+def make_h_all_fn(model, pcfg, layout=None, first_layer_fn=None):
+    """h_all(params, x, lay) -> [n_clients, B, W] per-client
+    activations at the exchange point (logits for exchange_at == -1,
+    hidden-layer-k outputs otherwise) from a canonical-order [B, F]
+    batch.  This is the per-row half of the inference path: every
+    output row depends only on its own input row, which is what lets
+    the serving slot pool (repro.serving.federated) batch rows from
+    different requests and stay bitwise equal to predict()."""
     fl = resolve_first_layer(pcfg)
-    through = partial(rest, model, pcfg.exchange_at)
 
     if fl == "masked":
         hidden = partial(client_hidden, model, pcfg.exchange_at)
@@ -712,6 +714,18 @@ def make_predict_fn(model, pcfg, layout=None, first_layer_fn=None):
 
         def h_all_fn(params, x, lay):
             return jax.vmap(hidden_from)(params, first(params, x, lay))
+
+    return h_all_fn
+
+
+def make_predict_fn(model, pcfg, layout=None, first_layer_fn=None):
+    """predict(params, x, lay) -> [n_clients, B] class predictions.
+    x is in canonical column order (Layout.apply).  Dead padded
+    clients' rows are garbage -- callers average metrics over the live
+    prefix only."""
+    through = partial(rest, model, pcfg.exchange_at)
+    h_all_fn = make_h_all_fn(model, pcfg, layout=layout,
+                             first_layer_fn=first_layer_fn)
 
     def predict(params, x, lay):
         h_all = h_all_fn(params, x, lay)

@@ -1,1 +1,14 @@
+"""Serving engines.
+
+``federated`` is the De-VertiFL product path: continuous-batched
+vertical inference over a fixed predict-slot pool with split-feature
+assembly and a hot-entity exchange cache (behind
+``repro.api.Session.serve()``).  ``engine`` is the legacy vLLM-style
+token-decoding engine for the sequence-model substrate (prefill
+splicing into running decode batches).
+"""
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.federated import (  # noqa: F401
+    SERVE_SCHEMA_VERSION, ExchangeCache, FederatedServer, ServeReport,
+    ServeRequest, make_serve_step_fn, split_features,
+)

@@ -1,0 +1,541 @@
+"""Federated serving: continuous-batched vertical inference.
+
+De-VertiFL inference is inherently multi-party -- a prediction for one
+entity needs EVERY client's feature slice plus the hidden-output
+exchange -- so the serving path is built around three ideas:
+
+  slot pool    a fixed pool of ``max_slots`` predict slots advanced by
+               ONE jitted batched step.  Free slots run padding and
+               are gated out by a traced ``slot_mask`` (client_mask
+               style), so occupancy can vary every step while the step
+               compiles exactly once per (max_slots, spec)
+               configuration (``step_traces`` records it).
+  assembly     a request's features *arrive split across clients*:
+               ``submit`` announces the request, ``offer(uid, client,
+               payload)`` delivers one client's canonical column slice
+               (``Layout.sizes[i]`` wide; ``split_features`` produces
+               them from raw rows).  The request becomes admissible
+               only when every live client has delivered -- or the
+               hot-entity cache already holds its exchange stack, in
+               which case NO client needs to compute or send anything.
+  hot cache    an LRU keyed by ``(spec_hash, entity_id)`` holding the
+               [n_clients, W] exchange-point activation stack captured
+               bitwise from a previous step.  A hit is spliced into
+               the slot batch via an exact ``jnp.where`` select
+               (``exchange.select_cached_exchange``), so cached and
+               recomputed requests produce bit-identical predictions.
+
+Admission is FIFO over readiness order and therefore deterministic for
+a fixed call sequence.  The ready queue is bounded by ``queue_cap``;
+under declared pressure (queue at cap -- never otherwise) the overflow
+policy either rejects the incoming request or evicts the oldest queued
+one.  Every request carries wall-clock telemetry (submit -> ready ->
+admit -> done) and :meth:`FederatedServer.report` folds it into a
+versioned :class:`ServeReport` (p50/p99 latency, throughput, cache and
+scheduler counters).
+
+The parity contract -- ``Session.serve()`` == ``Session.predict()``
+bit for bit, invariant to arrival order, slot count, batch
+composition, and cache state -- is pinned in tests/test_serving.py and
+documented in docs/ARCHITECTURE.md section 10.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.exchange import (hidden_output_exchange,
+                                 select_cached_exchange)
+from repro.core.protocol import (exchange_width, make_h_all_fn, rest)
+
+# 1: initial schema -- results/latency/throughput/cache/counters,
+# spec_hash-stamped (the serving analog of RunResult's versioning)
+SERVE_SCHEMA_VERSION = 1
+
+
+def split_features(layout, x) -> Dict[int, np.ndarray]:
+    """Raw original-column-order features (``[F]`` or ``[B, F]``) ->
+    per-client payloads ``{i: x[..., partition[i]]}`` for the LIVE
+    clients -- exactly the slice each feature party owns, in the order
+    the canonical layout concatenates them.  The serving harness, the
+    bench, and the examples all build request payloads through this
+    helper so a request is assembled from what clients would actually
+    transmit."""
+    x = np.asarray(x)
+    return {i: x[..., np.asarray(p)]
+            for i, p in enumerate(layout.partition[:layout.n_real])}
+
+
+@dataclass
+class ServeRequest:
+    """One vertical inference request.
+
+    uid        unique request id (results/telemetry key)
+    entity_id  identity of the ROW being predicted -- the hot-entity
+               cache key (with the spec hash).  Defaults to uid;
+               repeat lookups of the same entity should share it.
+    slices     optional per-client payloads ``{client: [F_i] slice}``
+               (canonical column slices; ``split_features`` makes
+               them).  Omitted slices arrive later via ``offer`` --
+               or never, if the entity is already cached.
+    """
+    uid: Any
+    entity_id: Any = None
+    slices: Optional[Dict[int, Any]] = None
+
+    def __post_init__(self):
+        if self.entity_id is None:
+            self.entity_id = self.uid
+
+
+class ExchangeCache:
+    """LRU cache of hot entities' exchange-point activation stacks.
+
+    Keys are ``(spec_hash, entity_id)`` -- the spec hash is part of
+    the key so a cache (which may be shared across servers) can never
+    serve one experiment's activations under another's params.  Values
+    are the bitwise [n_clients, W] stacks captured from the jitted
+    serve step; ``lookup`` counts hits/misses and refreshes recency,
+    ``put`` evicts least-recently-used entries beyond ``capacity``.
+    """
+
+    def __init__(self, capacity: int = 128):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got "
+                             f"{capacity}")
+        self.capacity = capacity
+        self._store: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self):
+        return len(self._store)
+
+    def __contains__(self, key):
+        return key in self._store
+
+    def lookup(self, key) -> Optional[np.ndarray]:
+        """The cached stack for ``key`` (refreshed to most-recent), or
+        None; counts the hit/miss."""
+        if key in self._store:
+            self._store.move_to_end(key)
+            self.hits += 1
+            return self._store[key]
+        self.misses += 1
+        return None
+
+    def put(self, key, value: np.ndarray):
+        self._store[key] = value
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._store),
+                "capacity": self.capacity}
+
+
+@dataclass
+class ServeReport:
+    """Versioned serving record -- the RunResult analog for
+    ``Session.serve()``.  ``results`` maps uid -> the live per-client
+    prediction vector (bitwise what ``Session.predict`` returns for
+    that row); ``telemetry`` is the per-request timing log."""
+    spec_hash: str
+    results: Dict[Any, np.ndarray]
+    telemetry: List[dict] = field(default_factory=list)
+    latency_ms: dict = field(default_factory=dict)
+    throughput_rps: float = 0.0
+    cache: Optional[dict] = None
+    counters: dict = field(default_factory=dict)
+    waiting: List[Any] = field(default_factory=list)
+    rejected: List[Any] = field(default_factory=list)
+    evicted: List[Any] = field(default_factory=list)
+    schema_version: int = SERVE_SCHEMA_VERSION
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict (BENCH_serving.json embeds this shape)."""
+        return {
+            "schema_version": self.schema_version,
+            "spec_hash": self.spec_hash,
+            "results": {str(k): np.asarray(v).tolist()
+                        for k, v in self.results.items()},
+            "telemetry": [{k: v for k, v in t.items()}
+                          for t in self.telemetry],
+            "latency_ms": dict(self.latency_ms),
+            "throughput_rps": self.throughput_rps,
+            "cache": None if self.cache is None else dict(self.cache),
+            "counters": dict(self.counters),
+            "waiting": [str(u) for u in self.waiting],
+            "rejected": [str(u) for u in self.rejected],
+            "evicted": [str(u) for u in self.evicted],
+        }
+
+
+def make_serve_step_fn(model, pcfg, layout, first_layer_fn=None):
+    """The ONE jitted batched predict step behind the slot pool.
+
+    step(params, x, h_cached, use_cached, slot_mask, lay) ->
+    (preds [n_clients, S], h_all [n_clients, S, W])
+
+      x           [S, F] canonical-order slot batch (free / cached
+                  slots hold zeros)
+      h_cached    [n_clients, S, W] cached exchange stacks (zeros for
+                  fresh slots)
+      use_cached  [S] 0/1 gate: 1 = splice ``h_cached`` in place of
+                  the freshly computed stack (exact select)
+      slot_mask   [S] 0/1 gate: 0 = dead (free) slot; its prediction
+                  is forced to -1 so stale reads are loud
+
+    All gates are traced runtime values -- occupancy and cache state
+    never retrace -- and every op after the per-client forward is
+    per-row, so each slot's prediction equals predict()'s row bitwise
+    regardless of what shares the batch (tests/test_serving.py).
+    ``h_all`` returns the POST-select stack: what the cache should
+    hold for each slot's entity (fresh slots' recompute, cached
+    slots' unchanged cached bits).
+    """
+    through = partial(rest, model, pcfg.exchange_at)
+    h_all_fn = make_h_all_fn(model, pcfg, layout=layout,
+                             first_layer_fn=first_layer_fn)
+    exchange = pcfg.mode in ("devertifl", "verticomb")
+
+    def step(params, x, h_cached, use_cached, slot_mask, lay):
+        h_fresh = h_all_fn(params, x, lay)
+        h_all = select_cached_exchange(h_fresh, h_cached, use_cached)
+        h_ex = hidden_output_exchange(
+            h_all, differentiable=False,
+            client_mask=lay.client_mask) if exchange else h_all
+        logits = jax.vmap(through)(params, h_ex)   # [n, S, C]
+        preds = jnp.argmax(logits, axis=-1)        # [n, S]
+        preds = jnp.where(slot_mask[None, :] != 0, preds, -1)
+        return preds, h_all
+
+    return step
+
+
+class FederatedServer:
+    """Continuous-batched vertical inference over a fixed slot pool.
+
+    Construct via :meth:`repro.api.Session.server` (or directly from a
+    federation's model/pcfg/layout + trained param stack).  Drive it
+    either as a batch -- ``submit`` everything, then ``run()`` -- or
+    as a stream: interleave ``submit``/``offer`` with ``step()`` calls
+    and collect ``report()`` at the end (the offered-load bench does
+    this).
+    """
+
+    OVERFLOW = ("reject", "evict_oldest")
+
+    def __init__(self, model, pcfg, layout, params, *, spec_hash="",
+                 max_slots: int = 8, queue_cap: Optional[int] = None,
+                 cache=128, overflow: str = "reject",
+                 first_layer_fn=None):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        if queue_cap is not None and queue_cap < 1:
+            raise ValueError(f"queue_cap must be >= 1 or None, got "
+                             f"{queue_cap}")
+        if overflow not in self.OVERFLOW:
+            raise ValueError(f"unknown overflow policy {overflow!r}; "
+                             f"pick one of {self.OVERFLOW}")
+        self.params = params
+        self.layout = layout
+        self.spec_hash = spec_hash
+        self.max_slots = max_slots
+        self.queue_cap = queue_cap
+        self.overflow = overflow
+        self.n_live = layout.n_real
+        self.n_clients = layout.n_clients      # padded client axis
+        self.width = exchange_width(model, pcfg.exchange_at)
+        self._lay = layout.arrays()
+        self._sizes = tuple(layout.sizes)
+        self._offsets = tuple(layout.offsets)
+        self._F = layout.n_features
+
+        if cache is None or cache is False or cache == 0:
+            self.cache: Optional[ExchangeCache] = None
+        elif isinstance(cache, ExchangeCache):
+            self.cache = cache
+        elif isinstance(cache, int) and not isinstance(cache, bool):
+            self.cache = ExchangeCache(cache)
+        elif cache is True:
+            self.cache = ExchangeCache()
+        else:
+            raise TypeError(
+                "cache must be an int capacity, an ExchangeCache, "
+                f"True, or None/False/0 to disable; got {cache!r}")
+
+        # host-side slot state: fixed-shape staging buffers the jitted
+        # step consumes -- shapes never change, so it compiles once
+        S = max_slots
+        self._xbuf = np.zeros((S, self._F), np.float32)
+        self._hbuf = np.zeros((self.n_clients, S, self.width),
+                              np.float32)
+        self._ubuf = np.zeros((S,), np.float32)     # use_cached gates
+        self._mbuf = np.zeros((S,), np.float32)     # slot_mask gates
+        self._slots: List[Optional[Any]] = [None] * S
+
+        self._assembly: Dict[Any, dict] = {}   # uid -> request record
+        self._ready: deque = deque()
+        self._info: Dict[Any, dict] = {}
+        self.results: Dict[Any, np.ndarray] = {}
+        self.telemetry: List[dict] = []
+        self.admission_log: List[Any] = []
+        self.rejected: List[Any] = []
+        self.evicted: List[Any] = []
+        # queue length observed at each eviction/rejection -- the
+        # "declared pressure" witness (property tests assert every
+        # entry equals queue_cap)
+        self.pressure_log: List[int] = []
+        self.steps = 0
+        self.submitted = 0
+        self.completed = 0
+        self.max_occupancy = 0
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+        self._traces = 0
+        raw_step = make_serve_step_fn(model, pcfg, layout,
+                                      first_layer_fn=first_layer_fn)
+
+        def counted(*args):
+            self._traces += 1
+            return raw_step(*args)
+
+        self._step_fn = jax.jit(counted)
+
+    # ------------------------------------------------------------------
+    @property
+    def step_traces(self) -> int:
+        """Compile count of the batched step -- 1 after any number of
+        steps at one (max_slots, spec) configuration."""
+        return self._traces
+
+    @property
+    def occupancy(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def queued(self) -> int:
+        return len(self._ready)
+
+    @property
+    def pending(self) -> List[Any]:
+        """Uids still assembling (not all clients delivered, entity
+        not cached)."""
+        return list(self._assembly)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ServeRequest):
+        """Announce a request (optionally with some or all slices
+        attached).  Probes the hot-entity cache ONCE, here: a hit
+        makes the request admissible with no feature delivery at all
+        -- the cached exchange stack stands in for every client's
+        computation."""
+        if not isinstance(req, ServeRequest):
+            raise TypeError(f"submit() takes a ServeRequest, got "
+                            f"{type(req).__name__}")
+        if req.uid in self._info:
+            raise ValueError(f"duplicate request uid {req.uid!r}")
+        now = time.perf_counter()
+        if self._t0 is None:
+            self._t0 = now
+        rec = {"uid": req.uid, "entity_id": req.entity_id,
+               "t_submit": now, "status": "assembling",
+               "cached": False, "slices": {}}
+        self._info[req.uid] = rec
+        self._assembly[req.uid] = rec
+        self.submitted += 1
+        if self.cache is not None:
+            h = self.cache.lookup((self.spec_hash, req.entity_id))
+            if h is not None:
+                rec["cached"] = True
+                rec["_h"] = h
+                del self._assembly[req.uid]
+                self._to_ready(rec)
+                return req.uid
+        for client, payload in (req.slices or {}).items():
+            self.offer(req.uid, client, payload)
+        return req.uid
+
+    def offer(self, uid, client: int, payload):
+        """Deliver one client's canonical column slice for a pending
+        request.  Order is free -- readiness fires when the LAST live
+        client delivers, whoever that is (arrival-order invariance is
+        pinned in tests/test_serving.py)."""
+        rec = self._info.get(uid)
+        if rec is None:
+            raise KeyError(f"offer() for unknown request uid {uid!r}; "
+                           "submit() it first")
+        if rec["status"] != "assembling":
+            # cache-hit / queued / in-flight requests need no slices;
+            # late deliveries are dropped silently (the federated
+            # analog of a straggler's payload arriving after the
+            # round already served the request)
+            return
+        if not 0 <= client < self.n_live:
+            raise ValueError(f"client {client} out of range for "
+                             f"{self.n_live} live clients")
+        payload = np.asarray(payload, np.float32).reshape(-1)
+        want = self._sizes[client]
+        if payload.shape != (want,):
+            raise ValueError(
+                f"request {uid!r}: client {client}'s slice must have "
+                f"{want} features (Layout.sizes[{client}]), got "
+                f"{payload.shape}")
+        rec["slices"][client] = payload
+        if len(rec["slices"]) == self.n_live:
+            x = np.zeros((self._F,), np.float32)
+            for i, sl in rec["slices"].items():
+                x[self._offsets[i]:self._offsets[i]
+                  + self._sizes[i]] = sl
+            rec["_x"] = x
+            del rec["slices"]
+            del self._assembly[uid]
+            self._to_ready(rec)
+
+    def _to_ready(self, rec):
+        """Move an assembled (or cache-hit) request to the bounded
+        admission queue, applying the overflow policy under declared
+        pressure (queue at cap) only."""
+        rec["t_ready"] = time.perf_counter()
+        if self.queue_cap is not None and \
+                len(self._ready) >= self.queue_cap:
+            self.pressure_log.append(len(self._ready))
+            if self.overflow == "reject":
+                rec["status"] = "rejected"
+                self.rejected.append(rec["uid"])
+                return
+            old = self._ready.popleft()          # evict_oldest
+            self._info[old]["status"] = "evicted"
+            self.evicted.append(old)
+        rec["status"] = "ready"
+        self._ready.append(rec["uid"])
+
+    # ------------------------------------------------------------------
+    def _admit(self):
+        """FIFO-fill free slots from the ready queue."""
+        for s in range(self.max_slots):
+            if not self._ready:
+                break
+            if self._slots[s] is not None:
+                continue
+            uid = self._ready.popleft()
+            rec = self._info[uid]
+            rec["t_admit"] = time.perf_counter()
+            rec["status"] = "in_flight"
+            self.admission_log.append(uid)
+            self._slots[s] = uid
+            self._mbuf[s] = 1.0
+            if rec["cached"]:
+                self._ubuf[s] = 1.0
+                self._xbuf[s] = 0.0
+                self._hbuf[:, s, :] = rec.pop("_h")
+            else:
+                self._ubuf[s] = 0.0
+                self._hbuf[:, s, :] = 0.0
+                self._xbuf[s] = rec.pop("_x")
+        self.max_occupancy = max(self.max_occupancy, self.occupancy)
+
+    def step(self) -> int:
+        """Admit what fits, advance every occupied slot by the one
+        jitted batched step, complete and free them.  Returns the
+        number of requests completed (0 when nothing was admissible).
+        """
+        self._admit()
+        if self.occupancy == 0:
+            return 0
+        preds, h_all = self._step_fn(
+            self.params, jnp.asarray(self._xbuf),
+            jnp.asarray(self._hbuf), jnp.asarray(self._ubuf),
+            jnp.asarray(self._mbuf), self._lay)
+        preds = np.asarray(preds)
+        h_all = np.asarray(h_all)
+        self.steps += 1
+        done = 0
+        now = time.perf_counter()
+        for s, uid in enumerate(self._slots):
+            if uid is None:
+                continue
+            rec = self._info[uid]
+            self.results[uid] = preds[:self.n_live, s].copy()
+            rec["t_done"] = now
+            rec["latency_s"] = now - rec["t_submit"]
+            rec["queue_s"] = rec["t_admit"] - rec["t_ready"]
+            rec["status"] = "done"
+            if self.cache is not None and not rec["cached"]:
+                self.cache.put((self.spec_hash, rec["entity_id"]),
+                               h_all[:, s, :].copy())
+            self.telemetry.append(rec)
+            self.completed += 1
+            done += 1
+            self._slots[s] = None
+            self._mbuf[s] = 0.0
+            self._ubuf[s] = 0.0
+            self._xbuf[s] = 0.0
+            self._hbuf[:, s, :] = 0.0
+        self._t_last = now
+        return done
+
+    def run(self) -> "ServeReport":
+        """Drain every admissible request (ready or in flight) and
+        return the report.  Requests still assembling -- a client
+        never delivered and the entity is not cached -- are left
+        pending and listed in ``report().waiting``."""
+        while self._ready or self.occupancy:
+            if self.step() == 0:
+                break
+        return self.report()
+
+    # ------------------------------------------------------------------
+    def report(self) -> ServeReport:
+        lat = np.asarray([t["latency_s"] for t in self.telemetry])
+        latency_ms = {}
+        if lat.size:
+            latency_ms = {
+                "p50": float(np.percentile(lat, 50) * 1e3),
+                "p99": float(np.percentile(lat, 99) * 1e3),
+                "mean": float(lat.mean() * 1e3),
+                "max": float(lat.max() * 1e3)}
+        wall = (self._t_last - self._t0) if (
+            self._t0 is not None and self._t_last is not None) else 0.0
+        thr = self.completed / wall if wall > 0 else 0.0
+        return ServeReport(
+            spec_hash=self.spec_hash,
+            results=dict(self.results),
+            telemetry=[{k: v for k, v in t.items()
+                        if not k.startswith("_") and k != "slices"}
+                       for t in self.telemetry],
+            latency_ms=latency_ms,
+            throughput_rps=thr,
+            cache=None if self.cache is None else self.cache.stats,
+            counters={"submitted": self.submitted,
+                      "completed": self.completed,
+                      "rejected": len(self.rejected),
+                      "evicted": len(self.evicted),
+                      "waiting": len(self._assembly),
+                      "steps": self.steps,
+                      "step_traces": self.step_traces,
+                      "max_occupancy": self.max_occupancy,
+                      "max_slots": self.max_slots},
+            waiting=list(self._assembly),
+            rejected=list(self.rejected),
+            evicted=list(self.evicted))
+
+    @property
+    def stats(self) -> dict:
+        return {"active": self.occupancy, "queued": self.queued,
+                "assembling": len(self._assembly),
+                "done": self.completed}

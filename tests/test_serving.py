@@ -1,63 +1,461 @@
-"""Continuous-batching engine: batched greedy generation must equal
-sequential single-request generation (slot isolation + prefill splicing
-are exact)."""
-import jax
-import jax.numpy as jnp
+"""Federated serving harness (repro.serving.federated behind
+``Session.serve()``).
+
+The load-bearing pin: **serving is predict, bit for bit** -- for any
+slot count, request arrival order, per-client slice delivery order,
+batch composition, queue pressure, and cache state (on/off/hit/miss),
+every completed request's per-client predictions equal the
+corresponding column of ``Session.predict()`` exactly.  Plus
+hypothesis property tests on the slot scheduler: admitted requests
+complete exactly once, occupancy never exceeds the pool, eviction
+happens only under declared queue pressure, and a fixed seed makes
+the admission order deterministic.
+"""
+import json
+
 import numpy as np
 import pytest
 
-from repro.configs.reduced import reduced_config
-from repro.models import build_model
-from repro.serving import Request, ServingEngine
+from repro.api import (ExchangeCache, ExperimentSpec, ServeRequest,
+                       build, split_features)
+
+SPEC = dict(dataset="mnist", mode="devertifl", n_clients=3, rounds=1,
+            epochs=1, n_samples=512, eval_every=0)
+N_REF = 24
 
 
-def sequential_generate(model, params, prompt, n_new, cache_len):
-    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
-    if model.cfg.is_encoder_decoder or model.cfg.modality != "text":
-        batch["prefix_emb"] = jnp.zeros(
-            (1, model.cfg.num_prefix_embeddings, model.cfg.d_model))
-    logits, st = jax.jit(
-        lambda p, b: model.prefill(p, b, cache_len=cache_len))(params,
-                                                               batch)
-    toks = [int(jnp.argmax(logits[0, -1]))]
-    step = jax.jit(model.decode_step)
-    for _ in range(n_new - 1):
-        lg, st = step(params, st, jnp.asarray([[toks[-1]]], jnp.int32))
-        toks.append(int(jnp.argmax(lg[0, -1])))
-    return toks
+@pytest.fixture(scope="module")
+def trained():
+    """One trained tiny session + raw test rows + the predict()
+    reference block every parity test compares against."""
+    sess = build(ExperimentSpec(**SPEC))
+    sess.run()
+    xte = np.asarray(sess.federation.xte)[:N_REF]
+    ref = np.asarray(sess.predict(xte))          # [n_live, N_REF]
+    return sess, xte, ref
 
 
-@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-1.6b",
-                                  "mixtral-8x22b"])
-def test_engine_matches_sequential(arch):
-    cfg = reduced_config(arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def make_requests(sess, xte, rows, uids=None, entities=None):
+    lay = sess.federation.layout
+    uids = uids if uids is not None else list(rows)
+    entities = entities if entities is not None else \
+        [f"e{r}" for r in rows]
+    return [ServeRequest(uid=u, entity_id=e,
+                         slices=split_features(lay, xte[r]))
+            for u, e, r in zip(uids, entities, rows)]
+
+
+def assert_parity(report, ref, uid_to_row):
+    for uid, row in uid_to_row.items():
+        got = report.results[uid]
+        assert np.array_equal(got, ref[:, row]), \
+            f"request {uid} (row {row}): {got} != {ref[:, row]}"
+
+
+# ---------------------------------------------------------------------------
+# parity pins
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_serve_matches_predict_bitwise(trained):
+    sess, xte, ref = trained
+    reqs = make_requests(sess, xte, range(N_REF))
+    report = sess.serve(reqs, max_slots=4)
+    assert report.counters["completed"] == N_REF
+    assert_parity(report, ref, {r: r for r in range(N_REF)})
+
+
+@pytest.mark.parametrize("max_slots", [1, 2, 7, 32])
+def test_slot_count_invariance(trained, max_slots):
+    """The slot-pool size changes batching and padding (dead slots run
+    garbage behind the slot_mask gate) but not one bit of any result."""
+    sess, xte, ref = trained
+    rows = list(range(10))
+    report = sess.serve(make_requests(sess, xte, rows),
+                        max_slots=max_slots)
+    assert report.counters["max_occupancy"] <= max_slots
+    assert report.counters["step_traces"] == 1
+    assert_parity(report, ref, {r: r for r in rows})
+
+
+@pytest.mark.parametrize("cache", [None, 2, 128])
+def test_cache_state_invariance(trained, cache):
+    """Cache off, thrashing (capacity 2), or ample -- and a second
+    pass full of repeat entities -- all produce identical bits."""
+    sess, xte, ref = trained
+    rows = [0, 1, 2, 3, 4, 1, 2, 0, 5, 1]
+    uids = list(range(len(rows)))
+    reqs = make_requests(sess, xte, rows, uids=uids,
+                         entities=[f"e{r}" for r in rows])
+    report = sess.serve(reqs, max_slots=3, cache=cache)
+    assert_parity(report, ref, dict(zip(uids, rows)))
+    if cache is None:
+        assert report.cache is None
+    else:
+        assert report.cache["hits"] + report.cache["misses"] == len(rows)
+
+
+def test_arrival_order_invariance(trained):
+    """Shuffled submit order + per-request shuffled, globally
+    interleaved per-client slice delivery: results match predict()
+    row-for-row no matter who sends last."""
+    sess, xte, ref = trained
+    lay = sess.federation.layout
+    rows = list(range(12))
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
-               for n in (5, 9, 3, 7)]
-    n_new = 6
+    for trial in range(3):
+        srv = sess.server(max_slots=4)
+        order = rng.permutation(rows)
+        offers = []
+        for r in order:
+            srv.submit(ServeRequest(uid=int(r), entity_id=f"t{trial}-{r}"))
+            sl = split_features(lay, xte[r])
+            offers += [(int(r), c, sl[c]) for c in sl]
+        rng.shuffle(offers)
+        for uid, c, payload in offers:
+            srv.offer(uid, c, payload)
+        report = srv.run()
+        assert report.counters["completed"] == len(rows)
+        assert_parity(report, ref, {r: r for r in rows})
 
-    engine = ServingEngine(model, params, max_batch=2, cache_len=64)
-    for i, p in enumerate(prompts):
-        engine.submit(Request(uid=i, prompt=p, max_new_tokens=n_new))
-    out = engine.run()
-    assert engine.stats["done"] == len(prompts)
 
-    for i, p in enumerate(prompts):
-        ref = sequential_generate(model, params, p, n_new, 64)
-        assert out[i] == ref, f"{arch} request {i}: {out[i]} vs {ref}"
+def test_partial_assembly_never_admits(trained):
+    """A request missing one client's slice stays out of the slot
+    pool; delivering the last slice (mid-stream, after steps already
+    ran) completes it with the same bits."""
+    sess, xte, ref = trained
+    lay = sess.federation.layout
+    srv = sess.server(max_slots=2)
+    sl = split_features(lay, xte[0])
+    srv.submit(ServeRequest(uid="slow", entity_id="slow"))
+    srv.offer("slow", 0, sl[0])
+    srv.offer("slow", 1, sl[1])
+    assert srv.step() == 0                  # nothing admissible
+    assert srv.pending == ["slow"]
+    # a complete request overtakes the stuck one
+    srv.submit(make_requests(sess, xte, [3], uids=["fast"])[0])
+    assert srv.step() == 1
+    assert np.array_equal(srv.results["fast"], ref[:, 3])
+    srv.offer("slow", 2, sl[2])             # last slice arrives late
+    report = srv.run()
+    assert report.counters["waiting"] == 0
+    assert np.array_equal(report.results["slow"], ref[:, 0])
 
 
-def test_engine_stop_token_and_refill():
-    cfg = reduced_config("qwen1.5-0.5b")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_batch=1, cache_len=64)
-    # more requests than slots -> queue drains via refill
-    for i in range(3):
-        engine.submit(Request(uid=i, prompt=[1, 2, 3],
-                              max_new_tokens=4))
-    out = engine.run()
-    assert sorted(out) == [0, 1, 2]
-    assert all(len(v) <= 4 for v in out.values())
+@pytest.mark.fast
+def test_cache_hit_serves_without_any_slices(trained):
+    """After one fresh serve, a repeat entity is served from the
+    hot-entity cache with NO feature delivery from any client --
+    bitwise the same prediction."""
+    sess, xte, ref = trained
+    srv = sess.server(max_slots=2, cache=16)
+    srv.submit(make_requests(sess, xte, [5], uids=[0],
+                             entities=["hot"])[0])
+    srv.run()
+    srv.submit(ServeRequest(uid=1, entity_id="hot"))    # no slices
+    report = srv.run()
+    assert report.cache["hits"] == 1
+    assert np.array_equal(report.results[1], ref[:, 5])
+    assert np.array_equal(report.results[1], report.results[0])
+    cached_rec = [t for t in report.telemetry if t["uid"] == 1][0]
+    assert cached_rec["cached"] is True
+
+
+def test_cache_keyed_by_spec_hash(trained):
+    """A cache shared across servers can never leak one spec's
+    activations into another's predictions: the spec hash is part of
+    the key, so the same entity_id under a different spec misses."""
+    sess, xte, ref = trained
+    other = build(ExperimentSpec(**{**SPEC, "seeds": (1,)}))
+    other.run()
+    assert other.spec.spec_hash != sess.spec.spec_hash
+    shared = ExchangeCache(capacity=64)
+    srv_a = sess.server(max_slots=2, cache=shared)
+    srv_a.submit(make_requests(sess, xte, [4], uids=["a"],
+                               entities=["shared-entity"])[0])
+    srv_a.run()
+    assert shared.hits == 0 and len(shared) == 1
+    # same entity id, different spec: must MISS and recompute under
+    # other's params
+    xte_o = np.asarray(other.federation.xte)[:N_REF]
+    srv_b = other.server(max_slots=2, cache=shared)
+    srv_b.submit(ServeRequest(
+        uid="b", entity_id="shared-entity",
+        slices=split_features(other.federation.layout, xte_o[4])))
+    rep_b = srv_b.run()
+    assert shared.hits == 0 and len(shared) == 2
+    ref_b = np.asarray(other.predict(xte_o))
+    assert np.array_equal(rep_b.results["b"], ref_b[:, 4])
+
+
+def test_padded_client_axis_parity(trained):
+    """A padded federation (max_clients > n_clients: dead client slots
+    ride the stack) serves the same bits as the unpadded one."""
+    sess, xte, ref = trained
+    padded = build(ExperimentSpec(**SPEC, max_clients=5))
+    padded.run()
+    reqs = make_requests(padded, xte, range(8))
+    report = padded.serve(reqs, max_slots=3)
+    ref_p = np.asarray(padded.predict(xte[:8]))
+    assert ref_p.shape[0] == SPEC["n_clients"]      # live prefix only
+    for r in range(8):
+        assert np.array_equal(report.results[r], ref_p[:, r])
+        assert np.array_equal(report.results[r], ref[:, r])
+
+
+@pytest.mark.parametrize("first_layer", ["masked", "slice"])
+def test_first_layer_lane_parity(trained, first_layer):
+    """Serving rides whatever first-layer lane the spec trains --
+    including the paper-literal masked reference."""
+    _, xte, _ = trained
+    sess = build(ExperimentSpec(**{**SPEC, "first_layer": first_layer}))
+    sess.run()
+    ref = np.asarray(sess.predict(xte[:6]))
+    report = sess.serve(make_requests(sess, xte, range(6)), max_slots=4)
+    assert_parity(report, ref, {r: r for r in range(6)})
+
+
+# ---------------------------------------------------------------------------
+# admission / eviction under load
+# ---------------------------------------------------------------------------
+def test_rejection_only_under_declared_pressure(trained):
+    sess, xte, ref = trained
+    srv = sess.server(max_slots=1, queue_cap=2, overflow="reject")
+    reqs = make_requests(sess, xte, range(6))
+    for r in reqs:
+        srv.submit(r)
+    report = srv.run()
+    # queue admits 2; everything beyond was rejected at full queue
+    assert report.counters["completed"] == 2
+    assert sorted(report.rejected) == [2, 3, 4, 5]
+    assert all(p == 2 for p in srv.pressure_log)
+    assert len(srv.pressure_log) == len(report.rejected)
+    assert_parity(report, ref, {r: r for r in report.results})
+
+
+def test_evict_oldest_sheds_the_head(trained):
+    sess, xte, ref = trained
+    srv = sess.server(max_slots=1, queue_cap=2,
+                      overflow="evict_oldest")
+    for r in make_requests(sess, xte, range(5)):
+        srv.submit(r)
+    report = srv.run()
+    # each overflow evicts the then-oldest queued request
+    assert sorted(report.evicted) == [0, 1, 2]
+    assert sorted(report.results) == [3, 4]
+    assert all(p == 2 for p in srv.pressure_log)
+    assert_parity(report, ref, {r: r for r in report.results})
+
+
+def test_no_pressure_without_cap(trained):
+    sess, xte, _ = trained
+    srv = sess.server(max_slots=1)          # queue_cap=None: unbounded
+    for r in make_requests(sess, xte, range(10)):
+        srv.submit(r)
+    report = srv.run()
+    assert report.counters["completed"] == 10
+    assert srv.pressure_log == []
+    assert report.rejected == [] and report.evicted == []
+
+
+# ---------------------------------------------------------------------------
+# telemetry / report / compile-once
+# ---------------------------------------------------------------------------
+def test_one_compile_across_occupancies(trained):
+    """Occupancy 1, partial, and full pools all run the SAME compiled
+    step: traced gates, never python branches."""
+    sess, xte, _ = trained
+    srv = sess.server(max_slots=4, cache=8)
+    for batch in ([0], [1, 2, 3], [4, 5, 6, 7], [0, 1]):  # incl repeats
+        for r in make_requests(sess, xte, batch,
+                               uids=[f"{len(srv.results)}-{r}"
+                                     for r in batch]):
+            srv.submit(r)
+        srv.run()
+    assert srv.step_traces == 1
+    assert srv.steps >= 4
+
+
+def test_telemetry_and_report_schema(trained):
+    sess, xte, _ = trained
+    report = sess.serve(make_requests(sess, xte, range(5)), max_slots=2)
+    for t in report.telemetry:
+        assert t["t_submit"] <= t["t_ready"] <= t["t_admit"] \
+            <= t["t_done"]
+        assert t["latency_s"] >= 0 and t["queue_s"] >= 0
+    assert report.latency_ms["p50"] <= report.latency_ms["p99"] \
+        <= report.latency_ms["max"]
+    assert report.throughput_rps > 0
+    assert report.spec_hash == sess.spec.spec_hash
+    json.dumps(report.to_dict())            # JSON-safe end to end
+
+
+def test_exchange_cache_lru_semantics():
+    cache = ExchangeCache(capacity=2)
+    a, b, c = (np.full((3, 4), v, np.float32) for v in (1, 2, 3))
+    cache.put(("s", "a"), a)
+    cache.put(("s", "b"), b)
+    assert cache.lookup(("s", "a")) is a    # refreshes recency
+    cache.put(("s", "c"), c)                # evicts LRU == "b"
+    assert ("s", "b") not in cache
+    assert cache.lookup(("s", "b")) is None
+    assert cache.lookup(("s", "a")) is a
+    assert cache.stats["evictions"] == 1
+    assert cache.stats["size"] == 2
+
+
+# ---------------------------------------------------------------------------
+# errors
+# ---------------------------------------------------------------------------
+def test_serve_errors(trained):
+    sess, xte, _ = trained
+    lay = sess.federation.layout
+    fresh = build(ExperimentSpec(**SPEC))
+    with pytest.raises(ValueError, match="before run"):
+        fresh.server()
+    nonfed = build(ExperimentSpec(**{**SPEC, "mode": "splitnn"}))
+    with pytest.raises(ValueError, match="federated"):
+        nonfed.server(params={})
+    srv = sess.server(max_slots=2)
+    with pytest.raises(KeyError, match="unknown request"):
+        srv.offer("nope", 0, np.zeros(lay.sizes[0]))
+    srv.submit(ServeRequest(uid=0, entity_id="x"))
+    with pytest.raises(ValueError, match="duplicate"):
+        srv.submit(ServeRequest(uid=0))
+    with pytest.raises(ValueError, match="out of range"):
+        srv.offer(0, 99, np.zeros(4))
+    with pytest.raises(ValueError, match="features"):
+        srv.offer(0, 0, np.zeros(lay.sizes[0] + 1))
+    with pytest.raises(ValueError, match="overflow"):
+        sess.server(overflow="drop-all")
+    with pytest.raises(TypeError, match="cache"):
+        sess.server(cache=1.5)
+    with pytest.raises(ValueError, match="max_slots"):
+        sess.server(max_slots=0)
+
+
+# ---------------------------------------------------------------------------
+# property tests: the slot scheduler
+#
+# Randomized serialized workloads (a plan = submits, per-client offers
+# in arbitrary global interleaving, step() calls sprinkled through)
+# drive scheduler invariants.  The plan generator is a pure function
+# of a numpy seed, so the suite runs everywhere: hypothesis (the
+# optional test extra) explores + shrinks the seed space when
+# installed, and a fixed seed sample covers it otherwise.
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                         # optional extra not baked in
+    HAVE_HYPOTHESIS = False
+
+
+def plan_cases(n):
+    """Seed-driving decorator: hypothesis when available, a fixed
+    parametrized sample otherwise.  Either way the test body receives
+    ``seed`` and builds the plan itself."""
+    def wrap(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=n, deadline=None)(
+                given(seed=st.integers(0, 2**31 - 1))(fn))
+        return pytest.mark.parametrize("seed", range(n))(fn)
+    return wrap
+
+
+def build_plan(rng):
+    """A randomized but fully serialized serving workload.  Admission
+    order is a deterministic function of the plan, and the plan is a
+    deterministic function of the seed."""
+    n_reqs = int(rng.integers(2, 11))
+    max_slots = int(rng.integers(1, 5))
+    queue_cap = None if rng.random() < 0.4 else int(rng.integers(1, 4))
+    overflow = ("reject", "evict_oldest")[int(rng.integers(0, 2))]
+    rows = rng.integers(0, 8, n_reqs)
+    events = []
+    for uid, row in enumerate(rows):
+        events.append(("submit", uid, int(row)))
+        for c in range(SPEC["n_clients"]):
+            events.append(("offer", uid, int(row), c))
+    shuffled = [events[i] for i in rng.permutation(len(events))]
+    # submit must precede its offers: hold early offers, flush on submit
+    fixed, held, seen = [], {}, set()
+    for ev in shuffled:
+        if ev[0] == "offer" and ev[1] not in seen:
+            held.setdefault(ev[1], []).append(ev)
+            continue
+        fixed.append(ev)
+        if ev[0] == "submit":
+            seen.add(ev[1])
+            fixed.extend(held.pop(ev[1], []))
+    for _ in range(int(rng.integers(0, 5))):   # sprinkle step() calls
+        fixed.insert(int(rng.integers(0, len(fixed) + 1)), ("step",))
+    return (max_slots, queue_cap, overflow, tuple(fixed))
+
+
+def _drive(sess, xte, plan):
+    """Execute a serialized event plan against a fresh server and
+    return (server, report).  Plans are pure data, so the same plan
+    replays exactly."""
+    max_slots, queue_cap, overflow, events = plan
+    srv = sess.server(max_slots=max_slots, queue_cap=queue_cap,
+                      overflow=overflow, cache=16)
+    lay = sess.federation.layout
+    for ev in events:
+        if ev[0] == "submit":
+            _, uid, row = ev
+            srv.submit(ServeRequest(uid=uid, entity_id=f"row{row}"))
+        elif ev[0] == "offer":
+            _, uid, row, client = ev
+            srv.offer(uid, client,
+                      split_features(lay, xte[row])[client])
+        else:                               # ("step",)
+            srv.step()
+    report = srv.run()
+    return srv, report
+
+
+@plan_cases(10)
+def test_scheduler_invariants(trained, seed):
+    """Every admitted request completes exactly once; occupancy never
+    exceeds the pool; eviction/rejection happen only at declared
+    pressure (ready queue exactly at cap)."""
+    sess, xte, ref = trained
+    plan = build_plan(np.random.default_rng(seed))
+    max_slots, queue_cap, overflow, events = plan
+    srv, report = _drive(sess, xte, plan)
+    # admitted <=> completed, exactly once
+    assert len(srv.admission_log) == len(set(srv.admission_log))
+    assert sorted(report.results) == sorted(srv.admission_log)
+    assert report.counters["completed"] == len(srv.admission_log)
+    # pool bound
+    assert report.counters["max_occupancy"] <= max_slots
+    # shed/evicted sets are disjoint from completions
+    shed = set(report.rejected) | set(report.evicted)
+    assert shed.isdisjoint(report.results)
+    # pressure ledger: one entry per shed request, queue at cap
+    assert len(srv.pressure_log) == len(shed)
+    if queue_cap is None:
+        assert srv.pressure_log == []
+    else:
+        assert all(p == queue_cap for p in srv.pressure_log)
+    # and through it all: parity
+    row_of = {ev[1]: ev[2] for ev in events if ev[0] == "submit"}
+    for uid, preds in report.results.items():
+        assert np.array_equal(preds, ref[:, row_of[uid]])
+
+
+@plan_cases(5)
+def test_fixed_seed_admission_deterministic(trained, seed):
+    """The same plan (a fixed-seed load generator's output) replayed
+    on a fresh server reproduces the admission order, the shed set,
+    and every result bitwise."""
+    sess, xte, _ = trained
+    plan = build_plan(np.random.default_rng(seed))
+    srv1, rep1 = _drive(sess, xte, plan)
+    srv2, rep2 = _drive(sess, xte, plan)
+    assert srv1.admission_log == srv2.admission_log
+    assert rep1.rejected == rep2.rejected
+    assert rep1.evicted == rep2.evicted
+    assert sorted(rep1.results) == sorted(rep2.results)
+    for uid in rep1.results:
+        assert np.array_equal(rep1.results[uid], rep2.results[uid])

@@ -1,0 +1,118 @@
+"""Legacy LM continuous-batching engine (repro.serving.engine):
+batched greedy generation must equal sequential single-request
+generation (slot isolation + prefill splicing are exact), slots refill
+from the queue, stop tokens truncate, and temperature=0 decoding is
+deterministic across runs.  The federated serving path has its own
+harness in tests/test_serving.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.reduced import reduced_config
+from repro.models import build_model
+from repro.serving import Request, ServingEngine
+
+
+def sequential_generate(model, params, prompt, n_new, cache_len):
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    if model.cfg.is_encoder_decoder or model.cfg.modality != "text":
+        batch["prefix_emb"] = jnp.zeros(
+            (1, model.cfg.num_prefix_embeddings, model.cfg.d_model))
+    logits, st = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=cache_len))(params,
+                                                               batch)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    step = jax.jit(model.decode_step)
+    for _ in range(n_new - 1):
+        lg, st = step(params, st, jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0, -1])))
+    return toks
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-1.6b",
+                                  "mixtral-8x22b"])
+def test_engine_matches_sequential(arch):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 3, 7)]
+    n_new = 6
+
+    engine = ServingEngine(model, params, max_batch=2, cache_len=64)
+    for i, p in enumerate(prompts):
+        engine.submit(Request(uid=i, prompt=p, max_new_tokens=n_new))
+    out = engine.run()
+    assert engine.stats["done"] == len(prompts)
+
+    for i, p in enumerate(prompts):
+        ref = sequential_generate(model, params, p, n_new, 64)
+        assert out[i] == ref, f"{arch} request {i}: {out[i]} vs {ref}"
+
+
+def test_engine_stop_token_and_refill():
+    cfg = reduced_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_batch=1, cache_len=64)
+    # more requests than slots -> queue drains via refill
+    for i in range(3):
+        engine.submit(Request(uid=i, prompt=[1, 2, 3],
+                              max_new_tokens=4))
+    out = engine.run()
+    assert sorted(out) == [0, 1, 2]
+    assert all(len(v) <= 4 for v in out.values())
+
+
+def test_engine_stop_token_truncates():
+    """A request whose greedy stream hits its stop token ends early
+    and the stop token itself is not emitted."""
+    cfg = reduced_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # discover the greedy stream first, then stop on its 2nd token
+    ref_engine = ServingEngine(model, params, max_batch=1, cache_len=64)
+    ref_engine.submit(Request(uid=0, prompt=[1, 2, 3],
+                              max_new_tokens=6))
+    ref = ref_engine.run()[0]
+    assert len(ref) == 6
+    engine = ServingEngine(model, params, max_batch=1, cache_len=64)
+    engine.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=6,
+                          stop_token=ref[1]))
+    out = engine.run()[0]
+    assert out == ref[:1], (out, ref)
+
+
+def test_engine_greedy_deterministic():
+    """temperature=0 decoding is a pure function of (params, prompts):
+    two engines over the same request set emit identical streams, and
+    slot count does not change any request's tokens."""
+    cfg = reduced_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3], [7, 5], [9, 9, 2, 4]]
+
+    def run(max_batch, seed):
+        engine = ServingEngine(model, params, max_batch=max_batch,
+                               cache_len=64, seed=seed)
+        for i, p in enumerate(prompts):
+            engine.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+        return engine.run()
+
+    a, b, c = run(2, 0), run(2, 1), run(3, 0)
+    assert a == b, "greedy decode must ignore the sampling seed"
+    assert a == c, "slot count must not change greedy streams"
+
+
+def test_engine_stats_track_queue_and_done():
+    cfg = reduced_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params, max_batch=1, cache_len=64)
+    for i in range(2):
+        engine.submit(Request(uid=i, prompt=[1, 2], max_new_tokens=3))
+    assert engine.stats == {"active": 0, "queued": 2, "done": 0}
+    engine.run()
+    assert engine.stats == {"active": 0, "queued": 0, "done": 2}
