@@ -18,7 +18,8 @@ def main() -> None:
                     help="fast perf-regression canary (~1 min): runs ONLY "
                          "the protocol lane (engine + schedule + sweep "
                          "throughput), the staleness schedule sweep, the "
-                         "fault-tolerance sweep, and the serving "
+                         "fault-tolerance sweep, the wire-transform "
+                         "sweep, and the serving "
                          "offered-load sweep at toy sizes and "
                          "skips the figures, table2, kernels, roofline, "
                          "and ablations lanes; nothing is written to "
@@ -27,17 +28,18 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list of lanes to run: figures,table2,"
                          "kernels,roofline,ablations,protocol,staleness,"
-                         "faults,serving (default: all; incompatible "
-                         "with --smoke)")
+                         "faults,wire,serving (default: all; "
+                         "incompatible with --smoke)")
     args = ap.parse_args()
     which = set((args.only or
                  "figures,table2,kernels,roofline,ablations,protocol,"
-                 "staleness,faults,serving,analysis").split(","))
+                 "staleness,faults,wire,serving,analysis").split(","))
     if args.smoke:
         if args.only:
             ap.error("--smoke runs only the protocol + staleness + "
-                     "faults + serving + analysis lanes; drop --only")
-        which = {"protocol", "staleness", "faults", "serving",
+                     "faults + wire + serving + analysis lanes; drop "
+                     "--only")
+        which = {"protocol", "staleness", "faults", "wire", "serving",
                  "analysis"}
 
     rows = []
@@ -68,6 +70,18 @@ def main() -> None:
     if "faults" in which:
         from benchmarks import faults
         rows += faults.run(smoke=args.smoke)
+    if "wire" in which:
+        import os
+        import tempfile
+
+        from benchmarks import wire
+        # the wire bench appends even under --smoke (its entry is the
+        # deliverable); keep the smoke entry out of benchmarks/results/
+        rows += wire.run(
+            smoke=args.smoke,
+            results_path=os.path.join(tempfile.mkdtemp(),
+                                      "BENCH_wire.json")
+            if args.smoke else None)
     if "serving" in which:
         from benchmarks import serving
         rows += serving.run(smoke=args.smoke)

@@ -1,0 +1,183 @@
+"""Wire-transform tradeoff: what De-VertiFL's exchange gives up -- and
+what an adversary gains -- as the exchanged hidden stacks are
+quantized (int8), sparsified (topk), and DP-noised on the wire.
+
+Two sections per entry:
+
+grid       the transform x schedule grid runs as ONE padded lane batch
+           through ``repro.core.sweep.run_padded_cells``: transform
+           gates/knobs are traced per-lane state, so every cell shares
+           a single compiled round (``round_traces == 1`` is
+           recorded).  Each cell carries its f1, bytes-on-wire
+           telemetry (raw vs encoded ints), and the ``spec_hash`` of
+           the ExperimentSpec it corresponds to.
+probes     a per-cell hidden-state inversion probe: one Session.run
+           per (transform, schedule), then a ridge-style linear probe
+           fit from client 0's ON-THE-WIRE hiddens (post
+           ``wire_apply_static``) over half the test set to
+           reconstruct client 0's canonical input column block,
+           scored as relative MSE on the held-out half (1.0 == as bad
+           as predicting the column means; lower == more leakage).
+           Each probe session also records end-to-end steps/sec and
+           the run's ``timings["wire"]`` byte counters.
+
+Results append to ``benchmarks/results/BENCH_wire.json`` (same
+append-only rules as BENCH_protocol.json), one dated git-SHA-keyed
+entry per run.
+
+Run:    PYTHONPATH=src python -m benchmarks.wire
+Smoke:  PYTHONPATH=src python -m benchmarks.wire --smoke
+        (toy sizes; STILL appends -- the entry is flagged
+        ``"smoke": true`` so full-size trajectory readers can filter
+        it out.  The scripts/ci.sh wire-smoke lane runs this.)
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.protocol_bench import RESULTS, _append_entry
+from repro.api import ExperimentSpec, build, git_sha, spec_grid
+from repro.core.protocol import make_h_all_fn
+from repro.core.sweep import run_padded_cells
+from repro.wire import get_wire_plan, wire_apply_static
+
+FULL = dict(dataset="mnist", n_clients=3, seeds=(0, 1), rounds=3,
+            epochs=2, n_samples=2000,
+            transforms=("none", "int8", "topk:0.5", "topk:0.25",
+                        "dp:0.1", "topk:0.5+int8+dp:0.1"),
+            schedules=("sync", "stale_k:2"))
+SMOKE = dict(dataset="mnist", n_clients=3, seeds=(0,), rounds=1,
+             epochs=1, n_samples=512,
+             transforms=("none", "int8", "topk:0.5+int8+dp:0.1"),
+             schedules=("sync",))
+
+
+def inversion_probe(spec: ExperimentSpec) -> dict:
+    """Train the cell's federation, then try to reconstruct client 0's
+    input columns from what client 0 actually put on the wire.
+
+    The probe is the standard linear model-inversion baseline: fit
+    ``x0 ~ [h0_wire, 1] @ w`` by least squares on the first half of
+    the test set, score relative MSE on the second half against the
+    predict-the-column-means baseline.  ``h0_wire`` is client 0's
+    exchanged stack AFTER the static wire codec (the dp stage is a
+    training-time release control and is skipped, matching serving),
+    so the number measures leakage through the bytes a peer receives.
+    """
+    sess = build(spec)
+    rr = sess.run()
+    fed = sess.federation
+    plan = get_wire_plan(spec.transform)
+    h_all_fn = make_h_all_fn(fed.model, fed.pcfg, layout=fed.layout)
+    import jax.numpy as jnp
+    xte_c = jnp.asarray(fed.layout.apply(fed.xte))
+    h = h_all_fn(rr.params, xte_c, fed.layout.arrays())
+    if not plan.is_none:
+        h = wire_apply_static(plan, h)
+    h0 = np.asarray(h[0], np.float64)                 # [T, W] on-wire
+    x0 = np.asarray(xte_c[:, :fed.layout.sizes[0]], np.float64)
+    t = h0.shape[0] // 2
+    a = np.concatenate([h0, np.ones((h0.shape[0], 1))], axis=1)
+    w, *_ = np.linalg.lstsq(a[:t], x0[:t], rcond=None)
+    resid = a[t:] @ w - x0[t:]
+    base = x0[t:] - x0[:t].mean(axis=0)
+    rel_mse = float((resid ** 2).sum() /
+                    max((base ** 2).sum(), 1e-12))
+    steps = spec.rounds * spec.epochs * fed.n_batches
+    out = {
+        "spec_hash": spec.spec_hash,
+        "f1": rr.metrics["f1"],
+        "inversion_rel_mse": rel_mse,
+        "steps_per_sec": steps / max(rr.timings["wall_s"], 1e-9),
+    }
+    if "wire" in rr.timings:
+        out["wire"] = rr.timings["wire"]
+    return out
+
+
+def run(smoke=False, results_path=None):
+    """Sweep transform x schedule, run the per-cell inversion probes,
+    append the entry, return bench CSV rows.  smoke=True shrinks to
+    toy sizes (the entry is still appended, flagged smoke)."""
+    cfg = SMOKE if smoke else FULL
+    specs = spec_grid(
+        datasets=(cfg["dataset"],), modes=("devertifl",),
+        client_counts=(cfg["n_clients"],), seeds=cfg["seeds"],
+        schedules=cfg["schedules"], transforms=cfg["transforms"],
+        rounds=cfg["rounds"], epochs=cfg["epochs"],
+        n_samples=cfg["n_samples"])
+    out = run_padded_cells(cfg["dataset"], "devertifl", specs)
+
+    grid, rows = {}, []
+    none_f1 = None
+    probed = set()
+    for spec in specs:
+        key = f"{spec.transform}/{spec.fault}/{spec.schedule}/" \
+              f"{spec.n_clients}"
+        cell = out["cells"][key]
+        gkey = f"{spec.transform}/{spec.schedule}"
+        if gkey in probed:
+            continue
+        probed.add(gkey)
+        probe = inversion_probe(spec.replace(
+            seeds=(cfg["seeds"][0],), eval_every=0))
+        grid[gkey] = {
+            "f1_mean": cell["f1_mean"], "f1_std": cell["f1_std"],
+            "acc_mean": cell["acc_mean"],
+            "final_loss_mean": cell["final_loss_mean"],
+            "wire": cell.get("wire"),
+            "spec_hash": spec.spec_hash,
+            "probe": probe,
+        }
+        if spec.transform == "none" and spec.schedule == "sync":
+            none_f1 = cell["f1_mean"]
+        enc = (probe.get("wire") or {}).get("encoded_bytes", 0)
+        raw = (probe.get("wire") or {}).get("raw_bytes", 0)
+        rows.append((f"wire/{gkey}", 0.0,
+                     f"f1={cell['f1_mean']:.3f} "
+                     f"inv={probe['inversion_rel_mse']:.3f} "
+                     f"bytes={enc}/{raw}"))
+
+    entry = {
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "config": {k: v for k, v in cfg.items()},
+        "round_traces": out["round_traces"],
+        "lanes": out["lanes"],
+        "devices": out["devices"],
+        # the trajectory: accuracy, bytes-on-wire, and inversion
+        # leakage as a function of wire transform, transform-free sync
+        # as the reference corner
+        "none_f1": none_f1,
+        "grid": grid,
+        "smoke": smoke,
+    }
+    if results_path is None:
+        os.makedirs(RESULTS, exist_ok=True)
+        results_path = os.path.join(RESULTS, "BENCH_wire.json")
+    _append_entry(entry, results_path)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Wire-transform tradeoff sweep + inversion probes "
+                    "(appends to BENCH_wire.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (entry still appended, flagged "
+                         "smoke)")
+    ap.add_argument("--out", default=None,
+                    help="append the entry here instead of "
+                         "benchmarks/results/BENCH_wire.json (CI "
+                         "lanes point this at a throwaway path)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke, results_path=args.out):
+        print(",".join(str(x) for x in r))

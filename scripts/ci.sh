@@ -6,6 +6,7 @@
 #   scripts/ci.sh examples        # examples smoke (reduced configs)
 #   scripts/ci.sh schedule-smoke  # exchange-schedule suite + bench
 #   scripts/ci.sh fault-smoke     # fault-injection suite + bench + audit
+#   scripts/ci.sh wire-smoke      # wire-transform suite + bench + audit
 #   scripts/ci.sh serving-smoke   # federated serving suite + bench
 #
 # Lanes: fast (the `fast` pytest marker suite), bench
@@ -17,7 +18,11 @@
 # (tests/test_faults.py -- the repro.faults subsystem: fault="none"
 # bitwise pins, crash/straggle/corrupt determinism, guard quarantine,
 # rollback-retry recovery -- plus the faults bench smoke and a static
-# audit over a faulted combo subset), serving-smoke
+# audit over a faulted combo subset), wire-smoke (tests/test_wire.py
+# -- the repro.wire subsystem: transform="none" bitwise pins,
+# int8/topk/dp codec exactness, compile-once wire lanes, encoded
+# serving-cache payloads, skewed layouts -- plus the wire bench smoke
+# and a static audit over the hot transform combos), serving-smoke
 # (tests/test_serving.py + tests/test_serving_engine.py -- the
 # serve()==predict() bitwise parity pin, slot-scheduler property
 # suite, and the legacy LM engine -- plus the offered-load serving
@@ -38,8 +43,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 LANES=("${@:-all}")
 for lane in "${LANES[@]}"; do
   case "$lane" in
-    all|fast|bench|schedule-smoke|fault-smoke|serving-smoke|examples|analysis) ;;
-    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke serving-smoke examples analysis)" >&2
+    all|fast|bench|schedule-smoke|fault-smoke|wire-smoke|serving-smoke|examples|analysis) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke wire-smoke serving-smoke examples analysis)" >&2
        exit 2 ;;
   esac
 done
@@ -81,6 +86,21 @@ if want fault-smoke; then
     --no-lane-check
 fi
 
+if want wire-smoke; then
+  echo "== tests/test_wire.py (wire-transform suite) =="
+  python -m pytest -q tests/test_wire.py
+  echo "== benchmarks/wire.py --smoke =="
+  # --out keeps the smoke entry out of benchmarks/results/ (-u: fresh
+  # name, no pre-created empty file for the append reader to
+  # quarantine)
+  python -m benchmarks.wire --smoke --out "$(mktemp -u)"
+  echo "== repro.analysis (wired combo subset) =="
+  python -m repro.analysis -q --out /dev/null --modes devertifl \
+    --schedules sync --first-layers slice \
+    --transforms none "int8+dp:0.1" "topk:0.5" \
+    --no-lane-check
+fi
+
 if want serving-smoke; then
   echo "== tests/test_serving.py + tests/test_serving_engine.py (serving suites) =="
   python -m pytest -q tests/test_serving.py tests/test_serving_engine.py
@@ -101,6 +121,7 @@ if want examples; then
   python examples/quickstart.py
   python examples/federated_training.py --smoke
   python examples/staleness_sweep.py
+  python examples/wire_tradeoff.py --smoke
   python examples/serving.py --smoke
 fi
 

@@ -37,6 +37,10 @@ def build_parser() -> argparse.ArgumentParser:
                    help="fault plan specs (default: none plus a "
                         "crash+straggle+corrupt composite; non-none "
                         "plans run under devertifl only)")
+    p.add_argument("--transforms", nargs="+", default=None,
+                   help="wire transform specs (default: none plus the "
+                        "hot int8+dp and topk compositions; non-none "
+                        "transforms run under devertifl only)")
     p.add_argument("--passes", nargs="+", default=None,
                    choices=list(ALL_PASSES),
                    help="passes to run (default: all)")
@@ -62,6 +66,7 @@ def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
     kw = dict(modes=args.modes, schedules=args.schedules,
               first_layers=args.first_layers, faults=args.faults,
+              transforms=args.transforms,
               passes=args.passes, dataset=args.dataset,
               n_clients=args.n_clients,
               lane_check=not args.no_lane_check)
@@ -69,6 +74,7 @@ def main(argv=None) -> int:
         kw["schedules"] = args.schedules or ("sync",)
         kw["first_layers"] = args.first_layers or ("slice",)
         kw["faults"] = args.faults or ("none",)
+        kw["transforms"] = args.transforms or ("none",)
         kw["lane_check"] = False
 
     def progress(msg):

@@ -57,7 +57,10 @@ def _as_pcfg(spec) -> ProtocolConfig:
 def combo_name(pcfg: ProtocolConfig) -> str:
     name = f"{pcfg.mode}/{pcfg.schedule}/{resolve_first_layer(pcfg)}"
     fault = getattr(pcfg, "fault", "none")
-    return name if fault == "none" else f"{name}/{fault}"
+    if fault != "none":
+        name = f"{name}/{fault}"
+    transform = getattr(pcfg, "transform", "none")
+    return name if transform == "none" else f"{name}/{transform}"
 
 
 # ---------------------------------------------------------------------------
@@ -227,16 +230,19 @@ def _stamp_traces(report: AnalysisReport):
 
 
 def default_combos(modes=None, schedules=None, first_layers=None,
-                   faults=None):
-    """The registered mode x schedule x first-layer x fault grid the
-    CI lane audits: every federated mode (deduped through registry
-    aliases), the shipped schedule families, the three built-in
-    first-layer lanes ("auto" dedupes to its backend resolution), and
-    -- for devertifl, the only mode faults inject into -- a composite
-    fault plan exercising all three fault kinds plus the guard.  The
-    fault axis multiplies schedules, not first layers (injection and
-    guard sit in the exchange, which is first-layer-agnostic), to keep
-    the grid small."""
+                   faults=None, transforms=None):
+    """The registered mode x schedule x first-layer x fault x
+    transform grid the CI lane audits: every federated mode (deduped
+    through registry aliases), the shipped schedule families, the
+    three built-in first-layer lanes ("auto" dedupes to its backend
+    resolution), and -- for devertifl, the only mode faults and
+    transforms inject into -- a composite fault plan exercising all
+    three fault kinds plus the guard, and the hot wire transforms
+    (repro.wire).  The fault and transform axes multiply schedules,
+    not first layers (injection, guard and codec sit in the exchange,
+    which is first-layer-agnostic), to keep the grid small; one
+    combo per transform also chains the composite fault (the deepest
+    engine chain: schedule -> fault -> wire)."""
     from repro.api.modes import MODES, get_mode
     if modes is None:
         seen = {}
@@ -252,10 +258,13 @@ def default_combos(modes=None, schedules=None, first_layers=None,
         first_layers = ("masked", "slice", "pallas")
     if faults is None:
         faults = ("none", "crash:0.2:2+straggle:0.5:2+corrupt:0.05")
+    if transforms is None:
+        transforms = ("none", "int8+dp:0.1", "topk:0.5")
     combos = []
     for mode in modes:
         scheds = schedules if mode == "devertifl" else ("sync",)
         fts = faults if mode == "devertifl" else ("none",)
+        wts = transforms if mode == "devertifl" else ("none",)
         fls, seen_fl = [], set()
         for fl in first_layers:
             r = resolve_first_layer(ProtocolConfig(mode=mode,
@@ -263,10 +272,15 @@ def default_combos(modes=None, schedules=None, first_layers=None,
             if r not in seen_fl:
                 seen_fl.add(r)
                 fls.append(fl)
-        combos.extend((mode, sc, fl, "none")
+        combos.extend((mode, sc, fl, "none", "none")
                       for sc in scheds for fl in fls)
-        combos.extend((mode, sc, fls[0], ft)
+        combos.extend((mode, sc, fls[0], ft, "none")
                       for ft in fts if ft != "none" for sc in scheds)
+        combos.extend((mode, sc, fls[0], "none", t)
+                      for t in wts if t != "none" for sc in scheds)
+        combos.extend((mode, scheds[0], fls[0], ft, t)
+                      for t in wts if t != "none"
+                      for ft in fts if ft != "none")
     return combos
 
 
@@ -274,18 +288,19 @@ def audit_combos(modes=None, schedules=None, first_layers=None,
                  passes: Optional[Sequence[str]] = None,
                  dataset: str = "mnist", n_clients: int = 3,
                  lane_check: bool = True, faults=None,
-                 progress=None) -> AnalysisReport:
-    """Audit every registered mode x schedule x first-layer x fault
-    combination (the CI ``analysis`` lane).  The lane-structural
-    retrace check runs ONCE for the grid (it compares sweep lane
-    batches, which are per-dataset, not per-combo).  Returns one
-    merged report."""
+                 transforms=None, progress=None) -> AnalysisReport:
+    """Audit every registered mode x schedule x first-layer x fault x
+    transform combination (the CI ``analysis`` lane).  The
+    lane-structural retrace check runs ONCE for the grid (it compares
+    sweep lane batches, which are per-dataset, not per-combo).
+    Returns one merged report."""
     report = AnalysisReport()
-    combos = default_combos(modes, schedules, first_layers, faults)
-    for i, (mode, sched, fl, fault) in enumerate(combos):
+    combos = default_combos(modes, schedules, first_layers, faults,
+                            transforms)
+    for i, (mode, sched, fl, fault, transform) in enumerate(combos):
         pcfg = ProtocolConfig(dataset=dataset, n_clients=n_clients,
                               mode=mode, schedule=sched, first_layer=fl,
-                              fault=fault)
+                              fault=fault, transform=transform)
         if progress:
             progress(f"[{i + 1}/{len(combos)}] {combo_name(pcfg)}")
         report.merge(audit(pcfg, passes=passes, lane_check=False))

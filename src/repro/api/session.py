@@ -61,7 +61,12 @@ from repro.faults import (RESEED_TAG, DivergenceError, RetryPolicy,
 # checkpoints stay resumable); ``timings`` gains a "fault" sub-dict
 # (event counters + watchdog trips/retries) when a fault plan or a
 # RetryPolicy is active.  All changes are additive.
-RESULT_SCHEMA_VERSION = 3
+# 4 (PR 9): specs carry a ``transform`` field (repro.wire exchange
+# transforms); the checkpoint stamp folds non-none transforms in
+# (transform="none" keeps the PR 7 stamp); ``timings`` gains a "wire"
+# sub-dict (integer bytes-on-wire, raw vs encoded, cumulative and
+# per-round) when a transform is active.  All changes are additive.
+RESULT_SCHEMA_VERSION = 4
 _CKPT_NAME = "session"
 
 
@@ -86,15 +91,18 @@ def _schedule_hash(schedule: str) -> str:
 
 
 def _stream_stamp(spec) -> str:
-    """The schedule(+fault) identity stamped into checkpoints.  With
-    ``fault="none"`` this is exactly the PR 5 schedule stamp, so
-    pre-fault checkpoints stay resumable; a non-none plan extends the
-    stamped string, so a checkpoint written under one fault plan can
-    never silently continue under another (the carried fault state --
-    crash countdowns, straggler rings, counters -- belongs to its
-    plan's stream)."""
+    """The schedule(+fault)(+wire) identity stamped into checkpoints.
+    With ``fault="none"`` and ``transform="none"`` this is exactly the
+    PR 5 schedule stamp, so pre-fault/pre-wire checkpoints stay
+    resumable; a non-none plan or transform extends the stamped
+    string, so a checkpoint written under one stream can never
+    silently continue under another (the carried fault / wire state --
+    crash countdowns, straggler rings, byte counters -- belongs to its
+    own stream)."""
     ident = spec.schedule if spec.fault == "none" else \
         f"{spec.schedule}|fault={spec.fault}"
+    if spec.transform != "none":
+        ident = f"{ident}|wire={spec.transform}"
     return _schedule_hash(ident)
 
 
@@ -162,11 +170,13 @@ def _protocol_config(spec: ExperimentSpec, internal: str) -> ProtocolConfig:
         exchange_at=spec.exchange_at, mode=internal, fedavg=spec.fedavg,
         seed=spec.seed, n_samples=spec.n_samples, engine=spec.engine,
         first_layer=spec.first_layer, schedule=spec.schedule,
-        fault=spec.fault, max_clients=spec.max_clients)
+        fault=spec.fault, transform=spec.transform,
+        max_clients=spec.max_clients)
 
 
 def _sweep_config(spec: ExperimentSpec, client_counts,
-                  schedules=None, faults=None) -> SW.SweepConfig:
+                  schedules=None, faults=None,
+                  transforms=None) -> SW.SweepConfig:
     return SW.SweepConfig(
         client_counts=tuple(client_counts), seeds=spec.seeds,
         rounds=spec.rounds, epochs=spec.epochs,
@@ -176,7 +186,9 @@ def _sweep_config(spec: ExperimentSpec, client_counts,
         schedules=(tuple(schedules) if schedules is not None
                    else (spec.schedule,)),
         faults=(tuple(faults) if faults is not None
-                else (spec.fault,)))
+                else (spec.fault,)),
+        transforms=(tuple(transforms) if transforms is not None
+                    else (spec.transform,)))
 
 
 class Session:
@@ -309,27 +321,33 @@ class Session:
                 got_sched = load_entry(spec.checkpoint_dir, cand,
                                        "schedule_hash", name=_CKPT_NAME)
                 if got_sched is None:
-                    if spec.schedule != "sync" or spec.fault != "none":
+                    if spec.schedule != "sync" or \
+                            spec.fault != "none" or \
+                            spec.transform != "none":
                         raise ValueError(
                             f"checkpoint in {spec.checkpoint_dir!r} "
                             "carries no schedule stamp (written by a "
                             "pre-schedule writer, i.e. under "
-                            "schedule='sync', fault='none'); it "
-                            "cannot resume under schedule="
-                            f"{spec.schedule!r} / fault={spec.fault!r}"
-                            " -- the saved state has no schedule or "
-                            "fault buffers to restore")
+                            "schedule='sync', fault='none', "
+                            "transform='none'); it cannot resume "
+                            f"under schedule={spec.schedule!r} / "
+                            f"fault={spec.fault!r} / "
+                            f"transform={spec.transform!r} -- the "
+                            "saved state has no schedule, fault or "
+                            "wire buffers to restore")
                 elif not np.array_equal(got_sched, want_sched):
                     raise ValueError(
                         f"checkpoint in {spec.checkpoint_dir!r} was "
-                        "written under a different exchange schedule "
-                        "or fault plan than this spec's "
-                        f"(schedule={spec.schedule!r}, "
-                        f"fault={spec.fault!r}): resuming would "
-                        "splice mismatched scan state (stale buffers "
-                        "/ participation stream / fault countdowns) "
-                        "into this run; rebuild the spec with the "
-                        "original schedule+fault or use a fresh "
+                        "written under a different exchange schedule, "
+                        "fault plan or wire transform than this "
+                        f"spec's (schedule={spec.schedule!r}, "
+                        f"fault={spec.fault!r}, "
+                        f"transform={spec.transform!r}): resuming "
+                        "would splice mismatched scan state (stale "
+                        "buffers / participation stream / fault "
+                        "countdowns / byte counters) into this run; "
+                        "rebuild the spec with the original "
+                        "schedule+fault+transform or use a fresh "
                         "checkpoint_dir")
                 like = dict(like_base)
                 if got_sched is not None:
@@ -553,6 +571,17 @@ class Session:
             timings["fault"] = {
                 **({k: int(v) for k, v in tel.items()} if tel else {}),
                 "watchdog_trips": trips, "retries": retries}
+        wtel = fed.wire_telemetry(sched_state)
+        if wtel is not None:
+            # cumulative integer bytes-on-wire; the counters ride the
+            # scan carry, so a resumed run's totals cover every round
+            # since round 0 (the checkpoint restores them)
+            raw = int(wtel["raw_bytes"])
+            enc = int(wtel["encoded_bytes"])
+            timings["wire"] = {
+                "raw_bytes": raw, "encoded_bytes": enc,
+                "raw_bytes_per_round": raw // max(spec.rounds, 1),
+                "encoded_bytes_per_round": enc // max(spec.rounds, 1)}
         return self._result(final, history, params, timings,
                             resumed_from=resumed_from)
 
@@ -571,6 +600,8 @@ class Session:
                    "steps_per_sec": cell["steps_per_sec"]}
         if "fault_telemetry" in cell:
             timings["fault"] = cell["fault_telemetry"]
+        if "wire" in cell:
+            timings["wire"] = cell["wire"]
         return self._result(metrics, [], None, timings)
 
     def _splitnn_config(self, seed) -> SplitNNConfig:
@@ -616,10 +647,10 @@ def build(spec: ExperimentSpec) -> Session:
 # ---------------------------------------------------------------------------
 # spec grids
 # ---------------------------------------------------------------------------
-# grid cells must agree on everything but (dataset, mode, fault,
-# schedule, n_clients): they share one compiled round function per
-# (dataset, mode) group (fault, schedule and count are vmapped lane
-# axes)
+# grid cells must agree on everything but (dataset, mode, transform,
+# fault, schedule, n_clients): they share one compiled round function
+# per (dataset, mode) group (transform, fault, schedule and count are
+# vmapped lane axes)
 _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
                 "exchange_at", "fedavg", "engine", "first_layer",
                 "n_samples", "shard")
@@ -628,18 +659,20 @@ _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
 def spec_grid(datasets=("mnist", "fmnist", "titanic", "bank"),
               modes=("devertifl", "non_federated", "verticomb"),
               client_counts=(2, 3, 5), seeds=(0, 1, 2),
-              schedules=("sync",), faults=("none",), **common):
-    """The cartesian datasets x modes x faults x schedules x
-    client_counts spec grid (the axes the paper's Table 2 varies, plus
-    the PR 5 exchange-schedule axis and the PR 7 fault axis --
-    staleness- and fault-tolerance grids are spec grids too).
-    ``common`` forwards to every ExperimentSpec (rounds=, epochs=,
+              schedules=("sync",), faults=("none",),
+              transforms=("none",), **common):
+    """The cartesian datasets x modes x transforms x faults x
+    schedules x client_counts spec grid (the axes the paper's Table 2
+    varies, plus the PR 5 exchange-schedule axis, the PR 7 fault axis
+    and the PR 9 wire-transform axis -- staleness-, fault- and
+    compression-tolerance grids are spec grids too).  ``common``
+    forwards to every ExperimentSpec (rounds=, epochs=,
     first_layer=, ...)."""
     return tuple(
         ExperimentSpec(dataset=ds, mode=mode, n_clients=nc, seeds=seeds,
-                       schedule=sched, fault=f, **common)
-        for ds in datasets for mode in modes for f in faults
-        for sched in schedules for nc in client_counts)
+                       schedule=sched, fault=f, transform=t, **common)
+        for ds in datasets for mode in modes for t in transforms
+        for f in faults for sched in schedules for nc in client_counts)
 
 
 def _grid_groups(specs):
@@ -673,19 +706,21 @@ def _grid_groups(specs):
         gk = (s.dataset, s.mode)
         g = groups.setdefault(gk, [])
         if any(p.n_clients == s.n_clients and p.schedule == s.schedule
-               and p.fault == s.fault for p in g):
+               and p.fault == s.fault and p.transform == s.transform
+               for p in g):
             raise ValueError(f"duplicate grid cell {s.dataset}/{s.mode}/"
-                             f"{s.fault}/{s.schedule}/{s.n_clients}")
+                             f"{s.transform}/{s.fault}/{s.schedule}/"
+                             f"{s.n_clients}")
         g.append(s)
     return list(groups.items())
 
 
 def _group_axes(group):
-    """Ordered-unique (client_counts, schedules, faults) of one
-    (dataset, mode) spec group; the group must cover the full fault x
-    schedule x count cartesian (every fault/schedule lane reuses one
-    padded count batch)."""
-    counts, schedules, faults = [], [], []
+    """Ordered-unique (client_counts, schedules, faults, transforms)
+    of one (dataset, mode) spec group; the group must cover the full
+    transform x fault x schedule x count cartesian (every lane reuses
+    one padded count batch)."""
+    counts, schedules, faults, transforms = [], [], [], []
     for s in group:
         if s.n_clients not in counts:
             counts.append(s.n_clients)
@@ -693,15 +728,19 @@ def _group_axes(group):
             schedules.append(s.schedule)
         if s.fault not in faults:
             faults.append(s.fault)
-    want = {(f, sc, nc) for f in faults for sc in schedules
-            for nc in counts}
-    got = {(s.fault, s.schedule, s.n_clients) for s in group}
+        if s.transform not in transforms:
+            transforms.append(s.transform)
+    want = {(t, f, sc, nc) for t in transforms for f in faults
+            for sc in schedules for nc in counts}
+    got = {(s.transform, s.fault, s.schedule, s.n_clients)
+           for s in group}
     if got != want or len(group) != len(want):
         raise ValueError(
             f"spec grid group {group[0].dataset}/{group[0].mode} must "
-            f"cover the full fault x schedule x client-count cartesian "
-            f"{sorted(want)}; got {sorted(got)}")
-    return tuple(counts), tuple(schedules), tuple(faults)
+            f"cover the full transform x fault x schedule x "
+            f"client-count cartesian {sorted(want)}; got {sorted(got)}")
+    return (tuple(counts), tuple(schedules), tuple(faults),
+            tuple(transforms))
 
 
 def sweep_config_for_specs(specs):
@@ -714,9 +753,9 @@ def sweep_config_for_specs(specs):
             f"{[f'{ds}/{m}' for (ds, m), _ in groups]}; use "
             "repro.api.run_grid for multi-group spec grids")
     (ds, mode), group = groups[0]
-    counts, schedules, faults = _group_axes(group)
-    return ds, get_mode(mode).internal, _sweep_config(group[0], counts,
-                                                      schedules, faults)
+    counts, schedules, faults, transforms = _group_axes(group)
+    return ds, get_mode(mode).internal, _sweep_config(
+        group[0], counts, schedules, faults, transforms)
 
 
 def run_grid(specs, shard=None):
@@ -725,21 +764,28 @@ def run_grid(specs, shard=None):
     ({"cells": {"ds/mode/n": cell}, "compare": ...}), with each cell
     additionally stamped with the ``spec_hash`` of the spec that
     produced it.  A non-default schedule axis inserts the schedule
-    into the keys ("ds/mode/sched/n"), and a non-default fault axis
-    prepends the fault plan ("ds/mode/fault/sched/n"); sync-only
-    fault-free grids keep the historical keys.  ``shard`` overrides
-    the specs' shard policy."""
+    into the keys ("ds/mode/sched/n"), a non-default fault axis
+    prepends the fault plan ("ds/mode/fault/sched/n"), and a
+    non-default transform axis prepends the wire spec on top
+    ("ds/mode/transform/fault/sched/n"); sync-only fault-free
+    transform-free grids keep the historical keys.  ``shard``
+    overrides the specs' shard policy."""
     cells, compare = {}, {}
     for (ds, mode), group in _grid_groups(specs):
-        counts, schedules, faults = _group_axes(group)
+        counts, schedules, faults, transforms = _group_axes(group)
         out = SW.run_padded_cells(
             ds, get_mode(mode).internal,
-            _sweep_config(group[0], counts, schedules, faults),
+            _sweep_config(group[0], counts, schedules, faults,
+                          transforms),
             shard=group[0].shard if shard is None else shard)
         sync_only = schedules == ("sync",)
         none_only = faults == ("none",)
+        wire_none = transforms == ("none",)
         for s in group:
-            if not none_only:
+            if not wire_none:
+                ck = (f"{s.transform}/{s.fault}/{s.schedule}/"
+                      f"{s.n_clients}")
+            elif not none_only:
                 ck = f"{s.fault}/{s.schedule}/{s.n_clients}"
             elif not sync_only:
                 ck = f"{s.schedule}/{s.n_clients}"

@@ -80,6 +80,13 @@ class ExperimentSpec:
     # federations only.  The default "none" is EXCLUDED from
     # spec_hash so every pre-existing spec keeps its id.
     fault: str = "none"
+    # Exchange transform (repro.wire spec string, validated against
+    # the transform registry and canonicalized): "none" | "int8" |
+    # "topk:p" | "dp:sigma" | '+'-compositions | a register_transform
+    # name.  Non-none transforms run devertifl federations only.  The
+    # default "none" is EXCLUDED from spec_hash so every pre-existing
+    # spec keeps its id.
+    transform: str = "none"
     max_clients: Optional[int] = None   # pad client axis with dead slots
     shard: Union[str, bool, int] = "auto"   # grid lanes: "auto"|False|int
     n_samples: Optional[int] = None     # dataset size override (speed)
@@ -133,6 +140,17 @@ class ExperimentSpec:
                 "(faults are injected into the forward "
                 f"HiddenOutputExchange); mode {self.mode!r} supports "
                 "fault='none' only")
+        from repro.wire import get_wire_plan
+        wire = get_wire_plan(self.transform)     # raises w/ options
+        # canonicalize ("dp:0.10+topk:0.5" -> "topk:0.5+dp:0.1") so
+        # formatting cannot fork spec_hash
+        object.__setattr__(self, "transform", wire.spec)
+        if not wire.is_none and mode.internal != "devertifl":
+            raise ValueError(
+                f"transform {wire.spec!r} requires mode='devertifl' "
+                "(the transformed dataflow is the forward "
+                f"HiddenOutputExchange); mode {self.mode!r} supports "
+                "transform='none' only")
         if self.first_layer == "auto":
             # resolve backend-dependent "auto" NOW so the spec (and
             # its hash) records the lane that actually runs -- two
@@ -214,6 +232,10 @@ class ExperimentSpec:
         # hash identically to pre-fault specs; non-none plans fork
         if d.get("fault") == "none":
             del d["fault"]
+        # and for the wire axis (PR 9): transform="none" specs hash
+        # identically to pre-wire specs; non-none transforms fork
+        if d.get("transform") == "none":
+            del d["transform"]
         blob = json.dumps(d, sort_keys=True, default=list)
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 

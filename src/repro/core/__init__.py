@@ -11,5 +11,5 @@ from repro.core.sweep import SweepConfig, run_cell, run_grid  # noqa: F401
 from repro.core.exchange import hidden_output_exchange  # noqa: F401
 from repro.core.partition import (  # noqa: F401
     Layout, LayoutArrays, canonicalize, make_layout, make_partition,
-    masks_for,
+    masks_for, skewed_partition,
 )

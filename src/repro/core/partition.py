@@ -75,6 +75,26 @@ def make_partition(dataset: str, n_features: int, n_clients: int, seed=0):
     return V.round_robin_features(n_features, n_clients)
 
 
+def skewed_partition(n_features: int, sizes: Sequence[int], seed=0):
+    """A partition with EXPLICIT unequal per-client feature counts: a
+    seeded permutation of the feature ids split at the cumulative
+    ``sizes`` (each client's ids sorted, like the registry
+    strategies).  ``sizes`` must be positive and sum to
+    ``n_features``.  The sizes -- and therefore the canonical
+    offsets -- are seed-independent, so skewed layouts satisfy the
+    sweep engine's cross-seed static-offset requirement just like the
+    registry partitions."""
+    sizes = tuple(int(s) for s in sizes)
+    if not sizes or any(s < 1 for s in sizes):
+        raise ValueError(f"sizes must be positive ints, got {sizes}")
+    if sum(sizes) != n_features:
+        raise ValueError(f"sizes {sizes} sum to {sum(sizes)}, not "
+                         f"n_features={n_features}")
+    ids = np.random.default_rng(seed).permutation(n_features)
+    return [np.sort(p) for p in
+            np.split(ids, np.cumsum(sizes)[:-1])]
+
+
 def masks_for(partition, n_features, dtype=np.float32):
     """[n_clients, n_features] 0/1 masks (the zero-padding operators)."""
     return np.stack([V.feature_mask(idx, n_features, dtype)
@@ -213,8 +233,19 @@ def canonicalize(partition, n_features: int) -> Layout:
 
 
 def make_layout(dataset: str, n_features: int, n_clients: int,
-                seed=0, max_clients=None) -> Layout:
-    """Partition + canonicalize (+ optional padding) in one call."""
-    lay = canonicalize(make_partition(dataset, n_features, n_clients,
-                                      seed=seed), n_features)
+                seed=0, max_clients=None, sizes=None) -> Layout:
+    """Partition + canonicalize (+ optional padding) in one call.
+    ``sizes`` overrides the registry partition strategy with a skewed
+    split of explicit per-client feature counts
+    (:func:`skewed_partition`); every engine lane -- masked, slice,
+    pallas, padded or not -- trains identically on skewed and equal
+    splits (tests/test_wire.py pins it)."""
+    if sizes is not None:
+        if len(sizes) != n_clients:
+            raise ValueError(f"sizes has {len(sizes)} entries for "
+                             f"n_clients={n_clients}")
+        part = skewed_partition(n_features, sizes, seed=seed)
+    else:
+        part = make_partition(dataset, n_features, n_clients, seed=seed)
+    lay = canonicalize(part, n_features)
     return lay if max_clients is None else lay.pad(max_clients)

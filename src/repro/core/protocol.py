@@ -90,7 +90,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -140,10 +140,21 @@ class ProtocolConfig:
     # "crash:0.2+corrupt:0.05" wrap the schedule impl in the
     # fault-aware state machine (devertifl mode only).
     fault: str = "none"
+    # Exchange transform (repro.wire spec string): what the exchanged
+    # hidden stacks look like on the wire.  "none" is the untouched
+    # engine path; "int8", "topk:0.25", "dp:0.1",
+    # "topk:0.5+int8+dp:0.1" wrap the engine impl in the wire
+    # encode-decode round trip (devertifl mode only).
+    transform: str = "none"
     # Pad the client axis to this length with dead (masked) slots; None
     # means no padding. Live trajectories are bit-for-bit unchanged --
     # padding only buys shape-uniformity across client counts.
     max_clients: Optional[int] = None
+    # Explicit unequal per-client feature counts (must sum to the
+    # dataset's feature count); None keeps the registry partition
+    # strategy.  Skewed splits ride every first-layer lane unchanged
+    # (repro.core.partition.skewed_partition).
+    partition_sizes: Optional[Tuple[int, ...]] = None
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -243,31 +254,49 @@ def resolve_schedule(pcfg, model, n_train):
 
 
 def resolve_engine(pcfg, model, n_train):
-    """pcfg.schedule + pcfg.fault -> (Schedule, impl).  With
-    ``fault="none"`` this IS :func:`resolve_schedule` -- same objects,
-    same (possibly None) impl, so the fault-free engine stays
-    bit-for-bit the pre-fault one and literal sync keeps its legacy
-    path.  A non-none plan (devertifl only) wraps the schedule impl in
-    the fault state machine; literal sync is first promoted to a
-    depth-0 ring impl (``stale_k:0``, proven bitwise-sync by
-    tests/test_schedule.py) so the fault layer has hooks to ride."""
+    """pcfg.schedule + pcfg.fault + pcfg.transform -> (Schedule,
+    impl).  With ``fault="none"`` and ``transform="none"`` this IS
+    :func:`resolve_schedule` -- same objects, same (possibly None)
+    impl, so the adversity-free engine stays bit-for-bit the
+    pre-fault, pre-wire one and literal sync keeps its legacy path.
+    Non-none plans (devertifl only) wrap the schedule impl in the
+    fault state machine and then the wire transform (the chain is
+    schedule -> fault -> wire, wire outermost so it transforms what
+    the inner machinery buffers/screens); literal sync is first
+    promoted to a depth-0 ring impl (``stale_k:0``, proven
+    bitwise-sync by tests/test_schedule.py) so the wrappers have hooks
+    to ride."""
     sched, impl = resolve_schedule(pcfg, model, n_train)
+    bs = min(pcfg.batch_size, n_train)
+    width = exchange_width(model, pcfg.exchange_at)
+
+    def promoted(impl):
+        if impl is None:
+            from repro.schedule import LaneScheduleImpl
+            impl = LaneScheduleImpl(0, pcfg.padded_clients, bs, width)
+        return impl
+
     fault = getattr(pcfg, "fault", "none")
     from repro.faults import get_fault_plan, make_fault_impl
     plan = get_fault_plan(fault)
-    if plan.is_none:
-        return sched, impl
-    if pcfg.mode != "devertifl":
-        raise ValueError(
-            f"fault plan {plan.spec!r} requires mode='devertifl'; mode "
-            f"{pcfg.mode!r} supports fault='none' only")
-    bs = min(pcfg.batch_size, n_train)
-    width = exchange_width(model, pcfg.exchange_at)
-    if impl is None:
-        from repro.schedule import LaneScheduleImpl
-        impl = LaneScheduleImpl(0, pcfg.padded_clients, bs, width)
-    return sched, make_fault_impl(plan, impl, pcfg.padded_clients, bs,
-                                  width)
+    if not plan.is_none:
+        if pcfg.mode != "devertifl":
+            raise ValueError(
+                f"fault plan {plan.spec!r} requires mode='devertifl'; "
+                f"mode {pcfg.mode!r} supports fault='none' only")
+        impl = make_fault_impl(plan, promoted(impl),
+                               pcfg.padded_clients, bs, width)
+    transform = getattr(pcfg, "transform", "none")
+    from repro.wire import get_wire_plan, make_wire_impl
+    wire = get_wire_plan(transform)
+    if not wire.is_none:
+        if pcfg.mode != "devertifl":
+            raise ValueError(
+                f"transform {wire.spec!r} requires mode='devertifl'; "
+                f"mode {pcfg.mode!r} supports transform='none' only")
+        impl = make_wire_impl(wire, promoted(impl),
+                              pcfg.padded_clients, bs, width)
+    return sched, impl
 
 
 # ---------------------------------------------------------------------------
@@ -784,7 +813,8 @@ class DeVertiFL:
         self.n_features = self.model.in_features
         self.layout = PT.make_layout(pcfg.dataset, self.n_features,
                                      pcfg.n_clients, seed=pcfg.seed,
-                                     max_clients=pcfg.max_clients)
+                                     max_clients=pcfg.max_clients,
+                                     sizes=pcfg.partition_sizes)
         # live clients' ORIGINAL feature ids (dead padding slots are an
         # engine detail; the public partition is the paper's)
         self.partition = self.layout.partition[:pcfg.n_clients]
@@ -856,6 +886,12 @@ class DeVertiFL:
         """Cumulative fault-event counters carried in the scan state
         (repro.faults), or None when no fault plan is active."""
         tel = getattr(self._impl, "telemetry", None)
+        return None if tel is None else tel(sched_state)
+
+    def wire_telemetry(self, sched_state):
+        """Cumulative bytes-on-wire counters carried in the scan state
+        (repro.wire), or None when no transform is active."""
+        tel = getattr(self._impl, "wire_telemetry", None)
         return None if tel is None else tel(sched_state)
 
     def set_fedavg(self, fedavg_fn):

@@ -114,6 +114,13 @@ class SweepConfig:
     # largest delay across lanes.  Non-none plans run devertifl mode
     # only; custom plans cannot ride a lane axis.
     faults: Sequence[str] = ("none",)
+    # Exchange-transform lane axis (repro.wire spec strings).  Keep
+    # fraction, quantize flag and noise scale ride the traced wire
+    # state, so a compression-tradeoff grid (none / topk / int8 / dp
+    # lanes) shares the one compiled round as well.  Non-none
+    # transforms run devertifl mode only; custom transforms cannot
+    # ride a lane axis.
+    transforms: Sequence[str] = ("none",)
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +278,67 @@ def _stacked_fault_state(impl, plans, scheds, n_base, none_only):
 
 
 # ---------------------------------------------------------------------------
+# exchange-transform (wire) lanes
+# ---------------------------------------------------------------------------
+def _sweep_transforms(scfg, mode, model, n_clients, n_train, impl):
+    """Parse scfg.transforms into (wires, impl, none_only) for a lane
+    batch of one (dataset, mode).  A none-only axis hands the
+    schedule/fault impl back untouched -- the transform-free sweep is
+    bit-for-bit the pre-wire one.  Mixed transform lanes share ONE
+    WireImpl: keep fraction, quantize flag and noise scale are traced
+    per-lane state, so transform x fault x schedule grids ride the
+    single compiled round.  Like the fault layer, literal sync under a
+    wire axis is promoted to the depth-0 ring impl so the wire layer
+    has four-hook state to wrap; custom transforms may close over
+    per-federation statics and are refused."""
+    from repro.wire import get_wire_plan, make_wire_impl
+    if not scfg.transforms:
+        raise ValueError("transforms must name at least one transform")
+    wires = tuple(get_wire_plan(t) for t in scfg.transforms)
+    if len(wires) == 1 and wires[0].is_none:
+        return wires, impl, True
+    if mode != "devertifl":
+        raise ValueError(
+            f"transforms beyond 'none' require mode='devertifl' sweep "
+            f"cells, got mode {mode!r}")
+    if any(w.custom is not None for w in wires):
+        raise ValueError(
+            "custom transforms are not supported in sweep lanes (their "
+            "impls may close over per-federation statics the lane "
+            "vmap cannot vary); run them as standalone sessions")
+    from repro.core.protocol import exchange_width
+    bs = min(scfg.batch_size, n_train)
+    width = exchange_width(model, scfg.exchange_at)
+    if impl is None:
+        from repro.schedule import LaneScheduleImpl
+        impl = LaneScheduleImpl(0, n_clients, bs, width)
+    impl = make_wire_impl(wires[0], impl, n_clients, bs, width)
+    return wires, impl, False
+
+
+def _stacked_wire_state(impl, wires, plans, scheds, n_base,
+                        fault_none_only, wire_none_only):
+    """Per-lane initial carry states, transform-major over the
+    fault-major-over-schedule-major base ((wire, plan, sched) blocks of
+    n_base lanes each).  A none-only wire axis reduces to
+    :func:`_stacked_fault_state`."""
+    if wire_none_only:
+        return _stacked_fault_state(impl, plans, scheds, n_base,
+                                    fault_none_only)
+    per = []
+    for wp in wires:
+        for pl in plans:
+            kw = {"wire": wp}
+            if not fault_none_only:
+                kw["plan"] = pl
+            for sc in scheds:
+                per.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_base,) + a.shape),
+                    impl.init_state(sc, **kw)))
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *per)
+
+
+# ---------------------------------------------------------------------------
 # lane stacking
 # ---------------------------------------------------------------------------
 def _stacked_federations(dataset, n_clients, seeds, n_samples):
@@ -386,12 +454,17 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         raise ValueError(
             "run_cell takes exactly one fault plan; use "
             "run_padded_cells(faults=...) for fault grids")
+    if len(scfg.transforms) != 1:
+        raise ValueError(
+            "run_cell takes exactly one transform; use "
+            "run_padded_cells(transforms=...) for wire grids")
     pcfg = ProtocolConfig(
         dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
         n_samples=scfg.n_samples, first_layer=scfg.first_layer,
-        schedule=scfg.schedules[0], fault=scfg.faults[0])
+        schedule=scfg.schedules[0], fault=scfg.faults[0],
+        transform=scfg.transforms[0])
     model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
@@ -402,8 +475,10 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
                                        n_train)
     plans, impl, none_only = _sweep_faults(scfg, mode, model, n_clients,
                                            n_train, impl)
-    sched_state = _stacked_fault_state(impl, plans, scheds, n_seeds,
-                                       none_only)
+    wires, impl, wire_none = _sweep_transforms(scfg, mode, model,
+                                               n_clients, n_train, impl)
+    sched_state = _stacked_wire_state(impl, wires, plans, scheds,
+                                      n_seeds, none_only, wire_none)
 
     def init_one(key):
         init_key, loop_key = train_keys(key)
@@ -444,6 +519,10 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         tel = impl.telemetry(sched_state)
         cell["fault_telemetry"] = {k: int(np.sum(v))
                                    for k, v in tel.items()}
+    if not wire_none:
+        cell["transform"] = wires[0].spec
+        wtel = impl.wire_telemetry(sched_state)
+        cell["wire"] = {k: int(np.sum(v)) for k, v in wtel.items()}
     return cell
 
 
@@ -508,15 +587,17 @@ class LaneBatch(NamedTuple):
     xte: object
     yte: object
     lay: object
-    lanes: tuple                # [(n_clients, seed), ...] fault-major
-    scheds: tuple               # then sched-major over the base batch
+    lanes: tuple                # [(n_clients, seed), ...] wire-major
+    scheds: tuple               # then fault- then sched-major blocks
     sync_only: bool
     n_train: int
-    n_base: int                 # lanes per (fault, schedule) block
+    n_base: int                 # lanes per (wire, fault, sched) block
     width: int
     plans: tuple = ()           # parsed FaultPlans (fault lane axis)
     none_only: bool = True      # fault axis is the default ("none",)
     impl: object = None         # the resolved lane impl (None = sync)
+    wires: tuple = ()           # parsed WirePlans (transform lane axis)
+    wire_none_only: bool = True  # wire axis is the default ("none",)
 
     @property
     def n_lanes(self) -> int:
@@ -525,10 +606,11 @@ class LaneBatch(NamedTuple):
 
 def build_lane_batch(dataset, mode, scfg: SweepConfig,
                      max_clients=None, width=None) -> LaneBatch:
-    """Assemble the faults x schedules x client_counts x seeds lane
-    batch of one (dataset, mode) pair: stacked data/layouts/keys,
-    per-count padded inits, fault-major-over-schedule-major tiling,
-    and the single un-jitted round function every lane shares.
+    """Assemble the transforms x faults x schedules x client_counts x
+    seeds lane batch of one (dataset, mode) pair: stacked
+    data/layouts/keys, per-count padded inits,
+    wire-major-over-fault-major-over-schedule-major tiling, and the
+    single un-jitted round function every lane shares.
     ``max_clients`` widens the padded client axis beyond
     max(client_counts) and ``width`` widens the gather-slice first
     layer -- the auditor pins both so sub-batches that must share a
@@ -561,7 +643,9 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
                                                max_c, n_train)
     plans, impl, none_only = _sweep_faults(scfg, mode, model, max_c,
                                            n_train, impl)
-    n_sched, n_fault = len(scheds), len(plans)
+    wires, impl, wire_none = _sweep_transforms(scfg, mode, model,
+                                               max_c, n_train, impl)
+    n_sched, n_fault, n_wire = len(scheds), len(plans), len(wires)
 
     # per-count init (live keys must be split(init_key, nc) -- a
     # count-static derivation -- so init compiles once per count;
@@ -579,12 +663,12 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
     opt_state = jax.tree.map(lambda *a: jnp.concatenate(a), *os_)
     loop_keys = jnp.concatenate(lks)
 
-    # fault-major-over-schedule-major lane tiling: every (fault,
-    # schedule) pair reuses the SAME (count x seed) base batch -- same
-    # data, same layouts, same inits, same key streams -- and differs
-    # only in the per-lane carry state (traced k / p / rates +
-    # buffers)
-    n_tile = n_fault * n_sched
+    # wire-major-over-fault-major-over-schedule-major lane tiling:
+    # every (wire, fault, schedule) triple reuses the SAME (count x
+    # seed) base batch -- same data, same layouts, same inits, same
+    # key streams -- and differs only in the per-lane carry state
+    # (traced k / p / rates / keep fractions + buffers)
+    n_tile = n_wire * n_fault * n_sched
     if n_tile > 1:
         def tile(a):
             return jnp.concatenate([a] * n_tile, 0)
@@ -593,9 +677,9 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
         loop_keys = tile(loop_keys)
         params = jax.tree.map(tile, params)
         opt_state = jax.tree.map(tile, opt_state)
-    sched_state = _stacked_fault_state(impl, plans, scheds, n_base,
-                                       none_only)
-    lanes = tuple((nc, s) for _ in plans for _ in scheds
+    sched_state = _stacked_wire_state(impl, wires, plans, scheds,
+                                      n_base, none_only, wire_none)
+    lanes = tuple((nc, s) for _ in wires for _ in plans for _ in scheds
                   for (nc, s) in base_lanes)
 
     round_fn = make_round_fn(model, opt, pcfg, n_train,
@@ -607,7 +691,8 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
                      yte=yte, lay=lay, lanes=lanes, scheds=scheds,
                      sync_only=sync_only, n_train=n_train,
                      n_base=n_base, width=width, plans=plans,
-                     none_only=none_only, impl=impl)
+                     none_only=none_only, impl=impl, wires=wires,
+                     wire_none_only=wire_none)
 
 
 def run_padded_cells(dataset, mode, scfg, shard="auto"):
@@ -625,10 +710,14 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     ints; a non-default schedule axis keys cells as
     ``"{schedule}/{n_clients}"`` (e.g. ``"stale_k:2/3"``); a
     non-default fault axis prepends the plan
-    (``"{fault}/{schedule}/{n_clients}"``).  Each cell_dict has the
-    run_cell schema plus ``"schedule"`` (and, under a fault axis,
-    ``"fault"`` + per-cell ``"fault_telemetry"`` event counts summed
-    over seeds) -- except that wall_s is the SHARED batch wall and
+    (``"{fault}/{schedule}/{n_clients}"``); a non-default transform
+    axis prepends the wire spec on top
+    (``"{transform}/{fault}/{schedule}/{n_clients}"``).  Each
+    cell_dict has the run_cell schema plus ``"schedule"`` (under a
+    fault axis, ``"fault"`` + per-cell ``"fault_telemetry"`` event
+    counts summed over seeds; under a transform axis, ``"transform"``
+    + per-cell ``"wire"`` integer bytes-on-wire summed over seeds)
+    -- except that wall_s is the SHARED batch wall and
     each cell's steps_per_sec is its lanes' share of it (cells sum to
     the batch's steps_per_sec).  round_traces counts actual retraces
     of the round body -- 1 means the whole multi-count (and
@@ -647,6 +736,7 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
                                           lb.xte, lb.yte, lb.lay)
     round_fn, lanes, sync_only = lb.round_fn, lb.lanes, lb.sync_only
     plans, none_only = lb.plans, lb.none_only
+    wires, wire_none = lb.wires, lb.wire_none_only
     traces = 0
 
     def counted_round(*args):
@@ -679,43 +769,56 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
                                                       n_train).n_batches
     cells = {}
     s = len(scfg.seeds)
-    for fi, pl in enumerate(plans):
-        for si, sc in enumerate(scheds):
-            for ci, nc in enumerate(counts):
-                lo = (fi * len(scheds) + si) * n_base + ci * s
-                sl = slice(lo, lo + s)
-                if not none_only:
-                    ck = f"{pl.spec}/{sc.spec}/{nc}"
-                elif not sync_only:
-                    ck = f"{sc.spec}/{nc}"
-                else:
-                    ck = nc
-                cell = {
-                    "dataset": dataset, "mode": mode, "n_clients": nc,
-                    "schedule": sc.spec,
-                    "seeds": list(scfg.seeds),
-                    "f1_per_seed": f1s[sl], "acc_per_seed": accs[sl],
-                    "f1_mean": float(np.mean(f1s[sl])),
-                    "f1_std": float(np.std(f1s[sl])),
-                    "acc_mean": float(np.mean(accs[sl])),
-                    "final_loss_mean": float(losses_np[sl, -1].mean()),
-                    # the whole multi-count batch trains together, so
-                    # wall_s is SHARED across this group's cells and
-                    # each cell's steps_per_sec is its own lanes'
-                    # steps over that shared wall (cells sum to the
-                    # batch throughput -- do not read a single padded
-                    # cell's rate as a run_cell-style standalone
-                    # measurement)
-                    "wall_s": wall,
-                    "steps_per_sec": steps * s / max(wall, 1e-9),
-                }
-                if not none_only:
-                    cell["fault"] = pl.spec
-                    tel = lb.impl.telemetry(
-                        jax.tree.map(lambda a: a[sl], sched_state))
-                    cell["fault_telemetry"] = {
-                        k: int(np.sum(v)) for k, v in tel.items()}
-                cells[ck] = cell
+    for wi, wp in enumerate(wires):
+        for fi, pl in enumerate(plans):
+            for si, sc in enumerate(scheds):
+                for ci, nc in enumerate(counts):
+                    lo = ((wi * len(plans) + fi) * len(scheds)
+                          + si) * n_base + ci * s
+                    sl = slice(lo, lo + s)
+                    if not wire_none:
+                        ck = f"{wp.spec}/{pl.spec}/{sc.spec}/{nc}"
+                    elif not none_only:
+                        ck = f"{pl.spec}/{sc.spec}/{nc}"
+                    elif not sync_only:
+                        ck = f"{sc.spec}/{nc}"
+                    else:
+                        ck = nc
+                    cell = {
+                        "dataset": dataset, "mode": mode,
+                        "n_clients": nc,
+                        "schedule": sc.spec,
+                        "seeds": list(scfg.seeds),
+                        "f1_per_seed": f1s[sl],
+                        "acc_per_seed": accs[sl],
+                        "f1_mean": float(np.mean(f1s[sl])),
+                        "f1_std": float(np.std(f1s[sl])),
+                        "acc_mean": float(np.mean(accs[sl])),
+                        "final_loss_mean":
+                            float(losses_np[sl, -1].mean()),
+                        # the whole multi-count batch trains together,
+                        # so wall_s is SHARED across this group's
+                        # cells and each cell's steps_per_sec is its
+                        # own lanes' steps over that shared wall
+                        # (cells sum to the batch throughput -- do not
+                        # read a single padded cell's rate as a
+                        # run_cell-style standalone measurement)
+                        "wall_s": wall,
+                        "steps_per_sec": steps * s / max(wall, 1e-9),
+                    }
+                    if not none_only:
+                        cell["fault"] = pl.spec
+                        tel = lb.impl.telemetry(
+                            jax.tree.map(lambda a: a[sl], sched_state))
+                        cell["fault_telemetry"] = {
+                            k: int(np.sum(v)) for k, v in tel.items()}
+                    if not wire_none:
+                        cell["transform"] = wp.spec
+                        wtel = lb.impl.wire_telemetry(
+                            jax.tree.map(lambda a: a[sl], sched_state))
+                        cell["wire"] = {k: int(np.sum(v))
+                                        for k, v in wtel.items()}
+                    cells[ck] = cell
     out = {"cells": cells, "round_traces": traces, "lanes": n_lanes,
            "devices": n_dev, "wall_s": wall,
            "schedules": [sc.spec for sc in scheds],
@@ -723,6 +826,8 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
            "steps_per_sec": steps * n_lanes / max(wall, 1e-9)}
     if not none_only:
         out["faults"] = [pl.spec for pl in plans]
+    if not wire_none:
+        out["transforms"] = [w.spec for w in wires]
     return out
 
 

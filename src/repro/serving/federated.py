@@ -54,6 +54,8 @@ import numpy as np
 from repro.core.exchange import (hidden_output_exchange,
                                  select_cached_exchange)
 from repro.core.protocol import (exchange_width, make_h_all_fn, rest)
+from repro.wire import (WirePayload, get_wire_plan, pack, unpack,
+                        wire_apply_static)
 
 # 1: initial schema -- results/latency/throughput/cache/counters,
 # spec_hash-stamped (the serving analog of RunResult's versioning)
@@ -205,14 +207,31 @@ def make_serve_step_fn(model, pcfg, layout, first_layer_fn=None):
     ``h_all`` returns the POST-select stack: what the cache should
     hold for each slot's entity (fresh slots' recompute, cached
     slots' unchanged cached bits).
+
+    Under a non-none ``pcfg.transform`` (repro.wire) the fresh stack
+    passes the deterministic codec components (topk/int8) before the
+    cache select, so what crosses the serving wire -- and what the
+    hot-entity cache stores -- is the encoded release, exactly as in
+    training; dp noise is a training-time release control and is not
+    applied at serving (docs/ARCHITECTURE.md section 11).  Codec
+    idempotence keeps cached and recomputed requests bit-identical:
+    a cached (already round-tripped) stack re-encodes to itself.
     """
     through = partial(rest, model, pcfg.exchange_at)
     h_all_fn = make_h_all_fn(model, pcfg, layout=layout,
                              first_layer_fn=first_layer_fn)
     exchange = pcfg.mode in ("devertifl", "verticomb")
+    plan = get_wire_plan(getattr(pcfg, "transform", "none"))
+    if plan.custom is not None:
+        raise ValueError(
+            f"custom transform {plan.spec!r} has no serving codec; "
+            "serve with a built-in transform composition or "
+            "transform='none'")
 
     def step(params, x, h_cached, use_cached, slot_mask, lay):
         h_fresh = h_all_fn(params, x, lay)
+        if not plan.is_none:
+            h_fresh = wire_apply_static(plan, h_fresh)
         h_all = select_cached_exchange(h_fresh, h_cached, use_cached)
         h_ex = hidden_output_exchange(
             h_all, differentiable=False,
@@ -259,6 +278,11 @@ class FederatedServer:
         self.n_live = layout.n_real
         self.n_clients = layout.n_clients      # padded client axis
         self.width = exchange_width(model, pcfg.exchange_at)
+        # non-none wire plan: the step encodes the fresh exchange
+        # stack and the cache stores the PACKED payload (WirePayload
+        # -- sparse indices / int8 values / per-row scales), unpacked
+        # on admission; codec idempotence makes the round trip bitwise
+        self._plan = get_wire_plan(getattr(pcfg, "transform", "none"))
         self._lay = layout.arrays()
         self._sizes = tuple(layout.sizes)
         self._offsets = tuple(layout.offsets)
@@ -442,7 +466,10 @@ class FederatedServer:
             if rec["cached"]:
                 self._ubuf[s] = 1.0
                 self._xbuf[s] = 0.0
-                self._hbuf[:, s, :] = rec.pop("_h")
+                h = rec.pop("_h")
+                if isinstance(h, WirePayload):
+                    h = unpack(h)
+                self._hbuf[:, s, :] = h
             else:
                 self._ubuf[s] = 0.0
                 self._hbuf[:, s, :] = 0.0
@@ -476,8 +503,11 @@ class FederatedServer:
             rec["queue_s"] = rec["t_admit"] - rec["t_ready"]
             rec["status"] = "done"
             if self.cache is not None and not rec["cached"]:
+                h_slot = h_all[:, s, :].copy()
+                if not self._plan.is_none:
+                    h_slot = pack(self._plan, h_slot)
                 self.cache.put((self.spec_hash, rec["entity_id"]),
-                               h_all[:, s, :].copy())
+                               h_slot)
             self.telemetry.append(rec)
             self.completed += 1
             done += 1

@@ -1,0 +1,31 @@
+"""repro.wire -- registry-backed exchange transforms: what the
+federation's hidden stacks look like on the (simulated) wire
+(docs/ARCHITECTURE.md section 11).
+
+Spec strings ("int8", "topk:0.25", "dp:0.1", "topk:0.5+int8+dp:0.1",
+...) parse into :class:`WirePlan` records; :func:`make_wire_impl`
+wraps the resolved schedule/fault impl so the encode-decode round
+trip rides the scan carry as traced state (compile-once, sweepable as
+a lane axis) and integer bytes-on-wire counters surface through
+``RunResult.timings["wire"]``; the codecs themselves (and the packed
+form the serving ExchangeCache stores) live in
+:mod:`repro.wire.codecs`.  ``transform="none"`` never touches the
+engine: the protocol returns its legacy code path unwrapped, bit for
+bit.
+"""
+from repro.wire.codecs import (WIRE_TAG, WirePayload, dp_noise,
+                               int8_roundtrip, pack, topk_select,
+                               unpack, wire_apply, wire_apply_static,
+                               wire_bytes)
+from repro.wire.engine import WireImpl, make_wire_impl
+from repro.wire.registry import (TRANSFORMS, WireEntry, WirePlan,
+                                 get_wire_plan, register_transform,
+                                 transform_names)
+
+__all__ = [
+    "TRANSFORMS", "WIRE_TAG", "WireEntry", "WireImpl", "WirePayload",
+    "WirePlan", "dp_noise", "get_wire_plan", "int8_roundtrip",
+    "make_wire_impl", "pack", "register_transform", "topk_select",
+    "transform_names", "unpack", "wire_apply", "wire_apply_static",
+    "wire_bytes",
+]

@@ -1,0 +1,190 @@
+"""Wire codecs: what actually happens to an exchanged hidden stack on
+its way across the (simulated) wire, as pure jittable encode-decode
+round trips plus the host-side packed form the serving cache stores.
+
+Every codec treats the TRAILING axis as the unit that crosses the
+wire -- one entity's W-wide hidden vector -- so the same functions
+serve the training stack ``[n_clients, B, W]`` (per batch row) and the
+serving slot stack ``[n_clients, S, W]`` (per slot), and a cached
+per-slot payload is self-contained:
+
+  topk    keep the ceil(p * W) largest-|.| entries of each row, send
+          exact zeros for the rest.  Kept entries keep their float
+          bits untouched (an exact ``where`` select, never a multiply
+          by 1.0 masquerading as identity), so ``p = 1.0`` is a
+          bitwise identity.
+  int8    symmetric quantization with a per-row power-of-two scale:
+          ``scale = 2^e / 128`` with ``2^(e-1) < max|row| <= 2^e``
+          (via frexp), ``q = round(row / scale)`` clipped to
+          [-127, 127], decode ``q * scale``.  Every multiply/divide is
+          by a power of two -- exact float arithmetic -- so the
+          round trip is idempotent bit-for-bit: a decoded stack
+          re-encodes to the same wire bytes and decodes to the same
+          floats (tests/test_wire.py pins this).  That idempotence is
+          also what lets the serving cache re-derive the packed wire
+          form from a decoded stack without drift.
+  dp      Gaussian release noise ``sigma * N(0, 1)`` per entry, drawn
+          from ``fold_in(fold_in(fold_in(round_key, WIRE_TAG), step),
+          i)`` -- per-client derivation, disjoint from the
+          participation (0x5EED) and fault (0xFA17) tags, so the noise
+          stream is bitwise reproducible and padding-invariant.
+
+Gating is always an exact ``jnp.where`` on a traced on/off scalar --
+an off component returns the input's bits untouched (never ``h + 0.0``,
+which would quietly rewrite -0.0) -- so a "none" lane inside a wire
+sweep is bit-for-bit the transform-free engine.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# fold_in tag deriving the wire-noise key from the round key (disjoint
+# from PARTICIPATION_TAG = 0x5EED and FAULT_TAG = 0xFA17)
+WIRE_TAG = 0xC0DE
+
+
+def topk_select(h, p):
+    """Per-row magnitude sparsification: keep the ceil(p * W) largest
+    |.| entries of each trailing-axis row of ``h`` (ties at the
+    threshold are all kept), exact zeros elsewhere.  ``p`` is a traced
+    scalar -- a lane axis value -- so the keep count is data, not a
+    trace constant."""
+    w = h.shape[-1]
+    k = jnp.clip(jnp.ceil(p * jnp.float32(w)).astype(jnp.int32), 1, w)
+    mag = jnp.abs(h)
+    srt = jnp.sort(mag, axis=-1)            # ascending
+    thresh = jax.lax.dynamic_slice_in_dim(srt, w - k, 1,
+                                          axis=h.ndim - 1)
+    return jnp.where(mag >= thresh, h, jnp.zeros_like(h))
+
+
+def int8_roundtrip(h):
+    """Symmetric int8 quantize -> dequantize with a per-row
+    power-of-two scale.  All scaling is exact float arithmetic, so
+    applying this twice equals applying it once, bit-for-bit."""
+    amax = jnp.abs(h).max(axis=-1, keepdims=True)
+    _, e = jnp.frexp(amax)                  # amax <= 2^e < 2 * amax
+    scale = jnp.ldexp(jnp.ones_like(amax), e - 7)   # 2^(e-7) = 2^e/128
+    q = jnp.clip(jnp.round(h / scale), -127.0, 127.0)
+    return q * scale
+
+
+def dp_noise(key, n_clients, shape):
+    """[n_clients, *shape] standard-normal draws, client i's slice from
+    ``fold_in(key, i)`` -- the per-client derivation that keeps a
+    padded federation's live noise bitwise the unpadded one's."""
+    def one(i):
+        return jax.random.normal(jax.random.fold_in(key, i), shape)
+    return jax.vmap(one)(jnp.arange(n_clients, dtype=jnp.int32))
+
+
+def wire_apply(h, key, *, topk_on, topk_p, int8_on, dp_on, dp_sigma):
+    """The full encode-decode round trip over a per-client stack
+    ``h [n, ..., W]``: sparsify, quantize, noise -- each component
+    gated by its traced on/off scalar with an exact select, so any
+    subset of components rides one trace (the sweep lane contract).
+    ``key`` is the per-step wire key (round key folded with WIRE_TAG
+    and the in-round step index)."""
+    h1 = jnp.where(topk_on > 0, topk_select(h, topk_p), h)
+    h2 = jnp.where(int8_on > 0, int8_roundtrip(h1), h1)
+    noise = dp_sigma * dp_noise(key, h.shape[0], h.shape[1:])
+    return jnp.where(dp_on > 0, h2 + noise, h2)
+
+
+def wire_bytes(live_n, rows, width, *, topk_on, topk_p, int8_on):
+    """Integer bytes-on-wire for one step's exchange: ``raw`` is the
+    fp32 dense cost, ``encoded`` what the active components ship --
+    per kept entry 1 byte (int8) or 4 (fp32), plus 4-byte indices for
+    topk's kept entries and a 4-byte scale per quantized row.  The dp
+    component is payload-size-neutral.  ``live_n`` is the round's
+    effective sender count (a traced scalar)."""
+    f32 = jnp.float32
+    kept = jnp.where(topk_on > 0,
+                     jnp.ceil(topk_p * f32(width)), f32(width))
+    per_entry = jnp.where(int8_on > 0, f32(1.0), f32(4.0))
+    per_row = (kept * per_entry
+               + jnp.where(topk_on > 0, f32(4.0) * kept, f32(0.0))
+               + jnp.where(int8_on > 0, f32(4.0), f32(0.0)))
+    raw = live_n * f32(4.0 * rows * width)
+    enc = live_n * f32(rows) * per_row
+    return raw.astype(jnp.int32), enc.astype(jnp.int32)
+
+
+def wire_apply_static(plan, h, key=None):
+    """``wire_apply`` with the plan's components resolved statically --
+    the serving / probe path, where one process runs one transform and
+    nothing needs a lane axis.  ``key=None`` skips the dp component
+    (serving releases codec-encoded payloads; the dp mechanism is a
+    training-time release control -- docs/ARCHITECTURE.md section
+    11)."""
+    if plan.topk is not None:
+        h = topk_select(h, jnp.float32(plan.topk))
+    if plan.int8:
+        h = int8_roundtrip(h)
+    if plan.dp is not None and key is not None:
+        h = h + jnp.float32(plan.dp) * dp_noise(key, h.shape[0],
+                                                h.shape[1:])
+    return h
+
+
+# ---------------------------------------------------------------------------
+# host-side packed form (the serving ExchangeCache entry)
+# ---------------------------------------------------------------------------
+class WirePayload(NamedTuple):
+    """One encoded exchange stack as it would sit in a transport
+    buffer: per-client entry tuples ``(idx, vals, scale)`` -- kept
+    indices (or None when dense), int8 or fp32 values, and the
+    per-row scale (or None when unquantized) -- plus the dense shape
+    and the integer wire size."""
+    entries: tuple
+    shape: tuple
+    nbytes: int
+
+
+def pack(plan, h) -> WirePayload:
+    """Encode a (already round-tripped) per-client stack ``h [n, W]``
+    into its packed wire form.  Codec idempotence guarantees
+    ``unpack(pack(plan, h)) == h`` bit-for-bit when ``h`` came out of
+    :func:`wire_apply_static` for the same plan."""
+    h = np.asarray(h, np.float32)
+    flat = h.reshape(h.shape[0], -1)
+    entries, nbytes = [], 0
+    for row in flat:
+        if plan.topk is not None:
+            idx = np.nonzero(row)[0].astype(np.int32)
+            vals = row[idx]
+            nbytes += 4 * int(idx.size)
+        else:
+            idx, vals = None, row
+        if plan.int8:
+            amax = np.float32(np.abs(vals).max()) if vals.size \
+                else np.float32(0.0)
+            _, e = np.frexp(amax)
+            scale = np.ldexp(np.float32(1.0), int(e) - 7)
+            q = np.clip(np.round(vals / scale), -127, 127) \
+                .astype(np.int8)
+            entries.append((idx, q, np.float32(scale)))
+            nbytes += int(q.size) + 4
+        else:
+            entries.append((idx, vals, None))
+            nbytes += 4 * int(vals.size)
+    return WirePayload(tuple(entries), h.shape, int(nbytes))
+
+
+def unpack(payload: WirePayload) -> np.ndarray:
+    """Decode a packed payload back to the dense fp32 stack."""
+    n = len(payload.entries)
+    width = int(np.prod(payload.shape[1:], dtype=np.int64))
+    out = np.zeros((n, width), np.float32)
+    for i, (idx, vals, scale) in enumerate(payload.entries):
+        dense = vals.astype(np.float32) * scale if scale is not None \
+            else vals
+        if idx is None:
+            out[i] = dense
+        else:
+            out[i, idx] = dense
+    return out.reshape(payload.shape)

@@ -203,10 +203,14 @@ def test_retrace_static_round_traces():
 
 def test_audit_combos_merges_and_stamps():
     # the default fault axis appends one hot composite plan per
-    # schedule (devertifl only), after the fault-free combos
+    # schedule (devertifl only), after the fault-free combos; pin the
+    # transform axis off here to keep the traced run small -- the
+    # default transform grid arithmetic is pinned below without
+    # tracing
     rep = audit_combos(modes=("devertifl",),
                        schedules=("sync", "stale_k:1"),
                        first_layers=("masked",),
+                       transforms=("none",),
                        passes=("taint", "retrace"), lane_check=False)
     assert len(rep.combos) == 4
     assert sum("crash" in c for c in rep.combos) == 2
@@ -215,8 +219,29 @@ def test_audit_combos_merges_and_stamps():
     narrow = audit_combos(modes=("devertifl",),
                           schedules=("sync",),
                           first_layers=("masked",), faults=("none",),
+                          transforms=("none",),
                           passes=("taint",), lane_check=False)
     assert len(narrow.combos) == 1
+
+
+@pytest.mark.fast
+def test_default_combos_transform_axis():
+    # the default transform axis multiplies schedules (devertifl
+    # only) and chains each hot transform with the composite fault
+    # once: base 2 + fault 1x2 + wire 2x2 + chain 2x1 = 10 combos
+    from repro.analysis.audit import default_combos
+    combos = default_combos(modes=("devertifl",),
+                            schedules=("sync", "stale_k:1"),
+                            first_layers=("masked",))
+    assert len(combos) == 10
+    wired = [c for c in combos if c[4] != "none"]
+    assert len(wired) == 6
+    assert sum(c[3] != "none" for c in wired) == 2
+    # non-devertifl modes never get fault or transform combos
+    combos_nf = default_combos(modes=("non_federated",),
+                               schedules=("sync",),
+                               first_layers=("masked",))
+    assert all(c[3] == "none" and c[4] == "none" for c in combos_nf)
 
 
 # ---------------------------------------------------------------------------

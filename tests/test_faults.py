@@ -464,7 +464,7 @@ def test_fault_checkpoint_resume_bitwise_and_stamp_refusal(tmp_path):
     for other in ("crash:0.5", "none"):
         with pytest.raises(
                 ValueError,
-                match="different exchange schedule or fault plan"):
+                match="different exchange schedule, fault plan or wire"):
             build(ExperimentSpec(rounds=4, checkpoint_dir=d,
                                  checkpoint_every=1,
                                  **{**kw, "fault": other})).resume()

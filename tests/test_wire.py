@@ -1,0 +1,596 @@
+"""The repro.wire exchange-transform subsystem.
+
+Contracts pinned here (docs/ARCHITECTURE.md section 11):
+
+  * transform spec parsing/canonicalization (components reorder to
+    topk -> int8 -> dp, numbers normalize) and the registry's
+    actionable errors (+ register_transform extension)
+  * transform="none" IS the legacy engine (spec hashes pinned against
+    the pre-wire values; the protocol leaves the engine unwrapped; no
+    wire telemetry in timings), and non-none transforms fork
+    spec/resume hashes
+  * codec exactness: topk p=1.0 is a bitwise identity, the int8
+    round trip is idempotent bit-for-bit, dp noise is a reproducible
+    per-client fold_in stream disjoint from the fault/participation
+    tags
+  * transformed runs are deterministic, padding-invariant (incl. the
+    n_real=1 degenerate federation), and identical across the scan
+    and python engines -- also chained behind a schedule and a fault
+    plan
+  * transform x fault x schedule x count sweep lanes compile ONCE
+    (round_traces == 1) with the "none" lanes bitwise equal to the
+    wire-free sweep; bytes-on-wire surface per cell and in
+    RunResult.timings["wire"] as integers
+  * a checkpoint's schedule|fault|wire stream stamp refuses
+    cross-transform resumes
+  * serving: the ExchangeCache stores packed WirePayload entries
+    smaller than raw fp32, cache hits reproduce fresh results bitwise
+    (codec idempotence), custom transforms are refused with a codec
+    error
+  * the static auditor stays clean over wired combos and sees the
+    declared "wire" release channel
+  * skewed (unequal per-client) Layout partitions train bitwise
+    padded==unpadded on every first-layer lane
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import ExperimentSpec, ServeRequest, build, run_grid, \
+    spec_grid, split_features
+from repro.core.partition import make_layout, skewed_partition
+from repro.core.protocol import DeVertiFL, ProtocolConfig
+from repro.core.sweep import SweepConfig, run_cell, run_padded_cells
+from repro.wire import (WirePayload, WireImpl, dp_noise, get_wire_plan,
+                        int8_roundtrip, pack, register_transform,
+                        topk_select, transform_names, unpack,
+                        wire_apply, wire_apply_static)
+
+TINY = dict(dataset="titanic", n_clients=3, rounds=2, epochs=2, seed=0)
+# a composite transform exercising all three built-in stages at once
+HOT = "topk:0.5+int8+dp:0.1"
+
+
+def _traj(pcfg, engine=None):
+    r = DeVertiFL(pcfg).train(engine=engine)
+    return (np.concatenate([h["round_losses"] for h in r["history"]]),
+            np.array([h["f1"] for h in r["history"]]),
+            r["final"])
+
+
+# ---------------------------------------------------------------------------
+# a test-only custom transform: delegates every hook untouched, so its
+# trajectory must equal the transform-free engine bit-for-bit
+# ---------------------------------------------------------------------------
+class _PassthroughImpl:
+    def __init__(self, inner):
+        self.inner = inner
+
+    def init_state(self, sched, **kw):
+        return self.inner.init_state(sched, **kw)
+
+    def round_start(self, state, lay, key, round_idx):
+        return self.inner.round_start(state, lay, key, round_idx)
+
+    def select(self, state, h_now):
+        return self.inner.select(state, h_now)
+
+    def round_end(self, state):
+        return self.inner.round_end(state)
+
+
+register_transform(
+    "test_passthrough",
+    lambda inner, n_clients, batch_size, width, args:
+        _PassthroughImpl(inner),
+    overwrite=True)
+
+
+# ---------------------------------------------------------------------------
+# registry + parsing
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_wire_parsing_and_canonicalization():
+    assert get_wire_plan("none").is_none
+    assert not get_wire_plan("int8").is_none
+    # components reorder to the canonical topk -> int8 -> dp order and
+    # numbers normalize, so formatting cannot fork an identity
+    assert get_wire_plan("dp:0.1+topk:0.5").spec == "topk:0.5+dp:0.1"
+    assert get_wire_plan("int8+topk:0.25").spec == "topk:0.25+int8"
+    assert get_wire_plan("topk:0.50").spec == "topk:0.5"
+    p = get_wire_plan("dp:0.20+int8+topk:0.25")
+    assert p.spec == "topk:0.25+int8+dp:0.2"
+    assert (p.topk, p.int8, p.dp) == (0.25, True, 0.2)
+    assert p.topk_p == 0.25 and p.dp_sigma == 0.2
+    none = get_wire_plan("none")
+    assert none.topk_p == 1.0 and none.dp_sigma == 0.0
+    # WirePlan passes through; registry lists the built-in families
+    assert get_wire_plan(p) is p
+    assert {"none", "topk", "int8", "dp"} <= set(transform_names())
+
+
+@pytest.mark.fast
+def test_wire_parse_errors_are_actionable():
+    with pytest.raises(ValueError) as e:
+        get_wire_plan("gzip")
+    assert "topk" in str(e.value)           # options listed
+    for bad, msg in [
+        ("topk", "keep fraction"),
+        ("topk:0", "0 < p <= 1"),
+        ("topk:1.5", "0 < p <= 1"),
+        ("topk:lots", "float"),
+        ("dp", "noise scale"),
+        ("dp:-1", "sigma > 0"),
+        ("dp:0", "sigma > 0"),
+        ("int8:4", "no arguments"),
+        ("none:x", "no arguments"),
+        ("int8+int8", "duplicate"),
+        ("none+int8", "does not compose"),
+        ("test_passthrough+int8", "does not compose"),
+        ("int8++dp:0.1", "malformed"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            get_wire_plan(bad)
+
+
+# ---------------------------------------------------------------------------
+# spec integration + hash stability
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_none_spec_hash_unchanged_and_transform_forks():
+    """The transform field must not fork pre-existing spec ids (pinned
+    against the hashes recorded BEFORE the wire axis existed), while
+    non-none transforms get their own ids and formatting cannot fork
+    them."""
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=2,
+                          epochs=1)
+    assert spec.transform == "none"
+    assert spec.spec_hash == "58715f95206928f5"      # pre-PR-5 value
+    assert spec.resume_hash == "48945ac24cd700a7"    # pre-PR-5 value
+    hot = spec.replace(transform="int8")
+    assert hot.spec_hash != spec.spec_hash
+    assert hot.resume_hash != spec.resume_hash
+    assert spec.replace(transform="dp:0.1+topk:0.5").spec_hash == \
+        spec.replace(transform="topk:0.5+dp:0.1").spec_hash
+    assert spec.replace(transform="topk:0.50").spec_hash == \
+        spec.replace(transform="topk:0.5").spec_hash
+
+
+@pytest.mark.fast
+def test_spec_transform_validation():
+    with pytest.raises(ValueError) as e:
+        ExperimentSpec(dataset="titanic", transform="nope")
+    assert "topk" in str(e.value)
+    for mode in ("non_federated", "verticomb"):
+        with pytest.raises(ValueError, match="devertifl"):
+            ExperimentSpec(dataset="titanic", mode=mode,
+                           transform="int8")
+        # transform-free specs run everywhere
+        ExperimentSpec(dataset="titanic", mode=mode, transform="none")
+
+
+# ---------------------------------------------------------------------------
+# codec unit contracts
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_codec_exactness():
+    key = jax.random.PRNGKey(0)
+    h = jax.random.normal(key, (3, 8, 16)) * \
+        jnp.exp(jax.random.normal(jax.random.fold_in(key, 1),
+                                  (3, 8, 16)) * 3)
+    h = h.at[0, 0, 0].set(-0.0)            # the sign-bit tripwire
+    # topk p=1.0 keeps every entry's bits untouched (exact where)
+    full = topk_select(h, jnp.float32(1.0))
+    np.testing.assert_array_equal(
+        np.asarray(full).view(np.int32), np.asarray(h).view(np.int32))
+    # topk p=0.5 keeps entries bit-for-bit, exact zeros elsewhere
+    half = np.asarray(topk_select(h, jnp.float32(0.5)))
+    kept = half != 0
+    assert 0 < kept.sum() < h.size
+    np.testing.assert_array_equal(half[kept], np.asarray(h)[kept])
+    # int8 round trip is idempotent bit-for-bit
+    r1 = int8_roundtrip(h)
+    r2 = int8_roundtrip(r1)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    assert not np.array_equal(np.asarray(r1), np.asarray(h))
+    # dp noise: reproducible, per-client fold_in derivation
+    n1 = dp_noise(key, 3, (8, 16))
+    n2 = dp_noise(key, 3, (8, 16))
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+    np.testing.assert_array_equal(
+        np.asarray(n1)[1],
+        np.asarray(jax.random.normal(jax.random.fold_in(key, 1),
+                                     (8, 16))))
+
+
+@pytest.mark.fast
+def test_wire_apply_gates_match_static():
+    """The traced-gate path (sweep lanes) and the static path (serving
+    / probes) agree bitwise for every component subset."""
+    key = jax.random.PRNGKey(7)
+    h = jax.random.normal(key, (3, 4, 8))
+    for spec in ("topk:0.5", "int8", "topk:0.25+int8+dp:0.3"):
+        p = get_wire_plan(spec)
+        gated = wire_apply(
+            h, key,
+            topk_on=jnp.float32(p.topk is not None),
+            topk_p=jnp.float32(p.topk_p),
+            int8_on=jnp.float32(p.int8),
+            dp_on=jnp.float32(p.dp is not None),
+            dp_sigma=jnp.float32(p.dp_sigma))
+        static = wire_apply_static(p, h, key=key)
+        np.testing.assert_array_equal(np.asarray(gated),
+                                      np.asarray(static))
+    # every gate off: the input's bits come back untouched
+    noop = wire_apply(h, key, topk_on=jnp.float32(0),
+                      topk_p=jnp.float32(1.0), int8_on=jnp.float32(0),
+                      dp_on=jnp.float32(0), dp_sigma=jnp.float32(0))
+    np.testing.assert_array_equal(np.asarray(noop), np.asarray(h))
+
+
+@pytest.mark.fast
+def test_pack_unpack_roundtrip():
+    """unpack(pack(plan, h)) is bitwise h for codec-encoded stacks,
+    and the packed nbytes beats raw fp32 where the codec should win."""
+    h = np.asarray(jax.random.normal(jax.random.PRNGKey(3), (3, 32)))
+    for spec in ("int8", "topk:0.25", "topk:0.25+int8"):
+        plan = get_wire_plan(spec)
+        enc = np.asarray(wire_apply_static(plan, jnp.asarray(h)))
+        payload = pack(plan, enc)
+        assert isinstance(payload, WirePayload)
+        np.testing.assert_array_equal(unpack(payload), enc)
+    raw = h.size * 4
+    assert pack(get_wire_plan("int8"), np.asarray(
+        wire_apply_static(get_wire_plan("int8"),
+                          jnp.asarray(h)))).nbytes < raw
+    # dense none-plan pack is the fp32 cost exactly
+    assert pack(get_wire_plan("none"), h).nbytes == raw
+
+
+# ---------------------------------------------------------------------------
+# engine: none identity, determinism, padding, scan == python
+# ---------------------------------------------------------------------------
+def test_none_keeps_legacy_path_without_wire_timings():
+    fed = DeVertiFL(ProtocolConfig(**TINY))
+    assert fed._impl is None                # engine left unwrapped
+    hot = DeVertiFL(ProtocolConfig(transform="int8", **TINY))
+    assert isinstance(hot._impl, WireImpl)
+    res = build(ExperimentSpec(dataset="titanic", n_clients=2,
+                               rounds=1, epochs=1, seeds=(0,))).run()
+    assert "wire" not in res.timings
+
+
+def test_transform_deterministic_and_differs_from_none():
+    """Same transform -> bitwise the same trajectory (fold_in noise);
+    a hot transform actually changes the trajectory; everything stays
+    finite."""
+    hot = ProtocolConfig(transform=HOT, **TINY)
+    l1, f1, fin1 = _traj(hot)
+    l2, f2, fin2 = _traj(hot)
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_array_equal(f1, f2)
+    assert fin1 == fin2
+    l0, _, _ = _traj(ProtocolConfig(**TINY))
+    assert not np.array_equal(l0, l1)
+    assert np.isfinite(l1).all()
+
+
+def test_topk_full_keep_matches_none_bitwise():
+    """topk:1.0 runs the wire engine yet reduces to the transform-free
+    trajectory bit-for-bit (exact where select; the degenerate member
+    is proven, not aliased) -- and so does a custom passthrough."""
+    l0, f0, fin0 = _traj(ProtocolConfig(**TINY))
+    l1, f1, fin1 = _traj(ProtocolConfig(transform="topk:1.0", **TINY))
+    np.testing.assert_array_equal(l0, l1)
+    np.testing.assert_array_equal(f0, f1)
+    assert fin0 == fin1
+    l2, f2, fin2 = _traj(ProtocolConfig(transform="test_passthrough",
+                                        **TINY))
+    np.testing.assert_array_equal(l0, l2)
+    assert fin0 == fin2
+
+
+def test_transform_padding_invariance():
+    """A padded federation's live clients ship and receive the same
+    bytes as the unpadded twin: per-client fold_in noise, dead slots
+    masked -- down to the n_real=1 degenerate federation."""
+    hot = ProtocolConfig(transform=HOT, **TINY)
+    l0, _, fin0 = _traj(hot)
+    l1, _, fin1 = _traj(hot.replace(max_clients=6))
+    np.testing.assert_array_equal(l0, l1)
+    assert fin0 == fin1
+    solo = ProtocolConfig(dataset="titanic", n_clients=1, rounds=2,
+                          epochs=1, seed=0, transform=HOT)
+    s0, _, sfin0 = _traj(solo)
+    s1, _, sfin1 = _traj(solo.replace(max_clients=3))
+    np.testing.assert_array_equal(s0, s1)
+    assert sfin0 == sfin1
+
+
+@pytest.mark.parametrize("transform,sched,fault", [
+    ("int8", "sync", "none"),
+    ("dp:0.1", "stale_k:2", "none"),
+    (HOT, "stale_k:1", "crash:0.5:2+corrupt:0.5"),
+])
+def test_scan_matches_python_engine_under_transforms(transform, sched,
+                                                     fault):
+    pcfg = ProtocolConfig(schedule=sched, fault=fault,
+                          transform=transform, **TINY)
+    l_scan, f_scan, fin_scan = _traj(pcfg, engine="scan")
+    l_py, f_py, fin_py = _traj(pcfg, engine="python")
+    np.testing.assert_array_equal(l_scan, l_py)
+    np.testing.assert_array_equal(f_scan, f_py)
+    assert fin_scan == fin_py
+
+
+def test_timings_wire_integer_bytes():
+    spec = ExperimentSpec(dataset="titanic", n_clients=3, rounds=2,
+                          epochs=1, seeds=(0,), transform="int8")
+    res = build(spec).run()
+    tel = res.timings["wire"]
+    assert set(tel) == {"raw_bytes", "encoded_bytes",
+                        "raw_bytes_per_round", "encoded_bytes_per_round"}
+    assert all(isinstance(v, int) for v in tel.values())
+    assert 0 < tel["encoded_bytes"] < tel["raw_bytes"]
+    assert tel["raw_bytes_per_round"] == tel["raw_bytes"] // 2
+
+
+# ---------------------------------------------------------------------------
+# wire lanes in the sweep engine
+# ---------------------------------------------------------------------------
+def test_wire_grid_compiles_once_and_none_lane_is_exact():
+    """A transforms x faults x schedules x counts batch compiles its
+    round ONCE (gates/knobs are traced per-lane state), its
+    "none"-transform fault-free lanes equal the wire-free fault-free
+    sweep bitwise, and its wired cells carry integer byte counters."""
+    counts, seeds = (2, 3), (0,)
+    scheds = ("sync", "stale_k:1")
+    faults = ("none", "crash:0.5:2")
+    transforms = ("none", "int8", HOT)
+    out = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=counts, seeds=seeds, rounds=2,
+                    epochs=1, schedules=scheds, faults=faults,
+                    transforms=transforms))
+    assert out["round_traces"] == 1, out
+    assert out["lanes"] == len(transforms) * len(faults) * \
+        len(scheds) * len(counts) * len(seeds)
+    assert set(out["cells"]) == {f"{t}/{f}/{sc}/{nc}"
+                                 for t in transforms for f in faults
+                                 for sc in scheds for nc in counts}
+    assert out["transforms"] == list(transforms)
+    ref = run_padded_cells(
+        "titanic", "devertifl",
+        SweepConfig(client_counts=counts, seeds=seeds, rounds=2,
+                    epochs=1, schedules=scheds))
+    for sc in scheds:
+        for nc in counts:
+            assert out["cells"][f"none/none/{sc}/{nc}"]["f1_per_seed"] \
+                == ref["cells"][f"{sc}/{nc}"]["f1_per_seed"]
+            assert out["cells"][f"none/none/{sc}/{nc}"][
+                "final_loss_mean"] == \
+                ref["cells"][f"{sc}/{nc}"]["final_loss_mean"]
+    hot = out["cells"][f"{HOT}/crash:0.5:2/stale_k:1/3"]
+    assert hot["transform"] == HOT
+    w = hot["wire"]
+    assert set(w) == {"raw_bytes", "encoded_bytes"}
+    assert all(isinstance(v, int) for v in w.values())
+    assert w["raw_bytes"] > 0
+    q = out["cells"]["int8/none/sync/3"]["wire"]
+    assert 0 < q["encoded_bytes"] < q["raw_bytes"]
+
+
+def test_wire_sweep_rejects_bad_combinations():
+    base = dict(client_counts=(2,), seeds=(0,), rounds=1, epochs=1)
+    with pytest.raises(ValueError, match="one transform"):
+        run_cell("titanic", "devertifl", 2,
+                 SweepConfig(transforms=("none", "int8"), **base))
+    with pytest.raises(ValueError, match="devertifl"):
+        run_padded_cells("titanic", "non_federated",
+                         SweepConfig(transforms=("int8",), **base))
+    with pytest.raises(ValueError, match="custom transforms"):
+        run_padded_cells("titanic", "devertifl",
+                         SweepConfig(transforms=("test_passthrough",),
+                                     **base))
+
+
+def test_spec_grid_transform_axis_and_run_grid_keys():
+    """spec_grid grows a transforms axis; run_grid prepends the wire
+    spec to non-default cell keys and stamps spec hashes."""
+    specs = spec_grid(datasets=("titanic",), modes=("devertifl",),
+                      client_counts=(2,), seeds=(0,),
+                      transforms=("none", "int8"), rounds=1, epochs=1)
+    assert len(specs) == 2
+    assert [s.transform for s in specs] == ["none", "int8"]
+    grid = run_grid(specs)
+    assert set(grid["cells"]) == {"titanic/devertifl/none/none/sync/2",
+                                  "titanic/devertifl/int8/none/sync/2"}
+    for cell in grid["cells"].values():
+        assert cell["spec_hash"]
+    assert "wire" in grid["cells"]["titanic/devertifl/int8/none/sync/2"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint stream stamp
+# ---------------------------------------------------------------------------
+def test_wire_checkpoint_resume_bitwise_and_stamp_refusal(tmp_path):
+    """resume() restores wire state (byte counters, noise stream
+    position) bitwise, and the schedule|fault|wire stream stamp
+    refuses resuming under a different transform."""
+    d = str(tmp_path / "ckpt")
+    kw = dict(dataset="titanic", epochs=1, seeds=(0,), transform=HOT)
+    full = build(ExperimentSpec(rounds=4, **kw)).run()
+    build(ExperimentSpec(rounds=2, checkpoint_dir=d,
+                         checkpoint_every=1, **kw)).run()
+    res = build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                               checkpoint_every=1, **kw)).resume()
+    assert res.resumed_from == 2
+    assert res.metrics == full.metrics
+    assert res.timings["wire"] == full.timings["wire"]
+    for other in ("int8", "none"):
+        with pytest.raises(
+                ValueError,
+                match="different exchange schedule, fault plan or wire"):
+            build(ExperimentSpec(rounds=4, checkpoint_dir=d,
+                                 checkpoint_every=1,
+                                 **{**kw, "transform": other})).resume()
+
+
+# ---------------------------------------------------------------------------
+# serving: encoded cache payloads, cached == fresh bitwise
+# ---------------------------------------------------------------------------
+def test_serving_stores_packed_payloads_and_cache_hits_are_bitwise():
+    """Under a transform the ExchangeCache stores packed WirePayload
+    entries (smaller than raw fp32 for int8) and a cache-hit serve
+    reproduces the fresh serve bit-for-bit -- the codec-idempotence
+    guarantee, since the cached stack was already round-tripped."""
+    sess = build(ExperimentSpec(dataset="titanic", mode="devertifl",
+                                n_clients=3, rounds=1, epochs=1,
+                                seeds=(0,), eval_every=0,
+                                transform="int8"))
+    sess.run()
+    lay = sess.federation.layout
+    xte = np.asarray(sess.federation.xte)[:4]
+    srv = sess.server(max_slots=2, cache=16)
+    srv.submit(ServeRequest(uid=0, entity_id="hot",
+                            slices=split_features(lay, xte[0])))
+    srv.run()
+    payloads = list(srv.cache._store.values())
+    assert payloads and all(isinstance(p, WirePayload)
+                            for p in payloads)
+    width = payloads[0].shape[-1]
+    assert payloads[0].nbytes < 4 * 3 * width     # beats raw fp32
+    srv.submit(ServeRequest(uid=1, entity_id="hot"))  # no slices
+    report = srv.run()
+    assert report.cache["hits"] == 1
+    np.testing.assert_array_equal(report.results[1],
+                                  report.results[0])
+
+
+def test_serving_refuses_custom_transforms():
+    sess = build(ExperimentSpec(dataset="titanic", mode="devertifl",
+                                n_clients=2, rounds=1, epochs=1,
+                                seeds=(0,), eval_every=0,
+                                transform="test_passthrough"))
+    sess.run()
+    with pytest.raises(ValueError, match="serving codec"):
+        sess.server(max_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# the static auditor over wired combos
+# ---------------------------------------------------------------------------
+def test_audit_wired_combo_is_clean():
+    """Taint (hiddens leave only through the declared wire channel),
+    deadness, and retrace (wire state rides the carry) all hold on the
+    full schedule -> fault -> wire chain."""
+    from repro.analysis.audit import audit
+    pcfg = ProtocolConfig(dataset="titanic", n_clients=3, rounds=1,
+                          epochs=1, seed=0, schedule="stale_k:2",
+                          fault="crash:0.2:2", transform=HOT)
+    rep = audit(pcfg, lane_check=False)
+    assert rep.ok, rep.summary()
+    assert rep.static_round_traces == 1
+    assert rep.channels.get("wire", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# skewed Layout partitions
+# ---------------------------------------------------------------------------
+@pytest.mark.fast
+def test_skewed_partition_validation():
+    parts = skewed_partition(9, (5, 3, 1), seed=0)
+    assert [len(p) for p in parts] == [5, 3, 1]
+    assert sorted(np.concatenate(parts)) == list(range(9))
+    with pytest.raises(ValueError, match="sum"):
+        skewed_partition(9, (5, 3))
+    with pytest.raises(ValueError, match="positive"):
+        skewed_partition(9, (9, 0))
+    with pytest.raises(ValueError, match="n_clients"):
+        make_layout("titanic", 9, 3, sizes=(5, 4))
+    lay = make_layout("titanic", 9, 3, sizes=(5, 3, 1), max_clients=5)
+    assert lay.sizes == (5, 3, 1, 0, 0)
+    assert lay.offsets[:3] == (0, 5, 8)
+    # sizes (hence offsets) are seed-independent: the pallas lane's
+    # static-offset requirement holds across sweep seeds
+    assert make_layout("titanic", 9, 3, seed=7,
+                       sizes=(5, 3, 1)).offsets == lay.offsets[:3]
+
+
+@pytest.mark.parametrize("fl", ["masked", "slice", "pallas"])
+def test_skewed_layout_padded_bitwise_per_lane(fl):
+    """On an unequal (5, 3, 1) titanic split, every first-layer lane
+    trains its padded federation bit-for-bit like the unpadded one."""
+    base = ProtocolConfig(partition_sizes=(5, 3, 1), first_layer=fl,
+                          **TINY)
+    l0, f0, fin0 = _traj(base)
+    l1, f1, fin1 = _traj(base.replace(max_clients=8))
+    np.testing.assert_array_equal(l0, l1)
+    np.testing.assert_array_equal(f0, f1)
+    assert fin0 == fin1
+
+
+def test_skewed_layout_lanes_agree():
+    """The three first-layer lanes agree on the skewed split to the
+    same tolerance the equal-split equivalence tests pin (allclose:
+    only float reduction order differs)."""
+    base = ProtocolConfig(partition_sizes=(5, 3, 1), **TINY)
+    ref_l, ref_f1, ref_fin = _traj(base.replace(first_layer="masked"))
+    for fl in ("slice", "pallas"):
+        l, f1, fin = _traj(base.replace(first_layer=fl))
+        np.testing.assert_allclose(l, ref_l, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"{fl} loss vs masked")
+        np.testing.assert_allclose(f1, ref_f1, atol=0.02)
+        assert abs(fin["f1"] - ref_fin["f1"]) <= 0.02
+
+
+def test_skewed_layout_composes_with_wire_and_faults():
+    """A skewed split under the full schedule -> fault -> wire chain
+    stays deterministic and padding-invariant."""
+    pcfg = ProtocolConfig(partition_sizes=(5, 3, 1), schedule="stale_k:1",
+                          fault="crash:0.5:2", transform=HOT, **TINY)
+    l0, _, fin0 = _traj(pcfg)
+    l1, _, fin1 = _traj(pcfg)
+    np.testing.assert_array_equal(l0, l1)
+    l2, _, fin2 = _traj(pcfg.replace(max_clients=6))
+    np.testing.assert_array_equal(l0, l2)
+    assert fin0 == fin1 == fin2
+
+
+# ---------------------------------------------------------------------------
+# the bench
+# ---------------------------------------------------------------------------
+def test_wire_bench_smoke_appends(tmp_path):
+    """The wire bench runs its transform grid on one compile, probes
+    each cell, and appends a spec-hash-stamped entry whose cells carry
+    f1, integer bytes-on-wire, and the inversion-probe error."""
+    import json
+    import os
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, repo)
+    try:
+        from benchmarks import wire as wire_bench
+    finally:
+        sys.path.remove(repo)
+    path = tmp_path / "BENCH_wire.json"
+    rows = wire_bench.run(smoke=True, results_path=str(path))
+    assert any(name.startswith("wire/") for name, _, _ in rows)
+    data = json.loads(path.read_text())
+    assert isinstance(data, list) and len(data) == 1
+    entry = data[0]
+    assert entry["round_traces"] == 1
+    assert entry["smoke"] is True
+    assert "none/sync" in entry["grid"]
+    for cell in entry["grid"].values():
+        assert len(cell["spec_hash"]) == 16
+        assert np.isfinite(cell["f1_mean"])
+        w = cell["wire"]
+        assert all(isinstance(v, int) for v in w.values())
+        assert w["raw_bytes"] > 0
+        assert np.isfinite(cell["probe"]["inversion_rel_mse"])
+        assert cell["probe"]["steps_per_sec"] > 0
+    q = entry["grid"]["int8/sync"]["wire"]
+    assert q["encoded_bytes"] < q["raw_bytes"]
