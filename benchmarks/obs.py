@@ -1,0 +1,180 @@
+"""Observability overhead: what the in-scan metric taps cost.
+
+Three lanes per entry, all steady-state (post-compile) scan-round
+throughput via the protocol bench harness:
+
+levels     the SAME federation timed at obs="none" | "basic" | "full".
+           "none" is the untouched legacy engine (the ObsImpl wrapper
+           is never constructed); "basic" adds the per-round loss
+           series; "full" adds exchange-stack norms, grad norms and
+           the quarantine/bytes/staleness counters.  The entry records
+           steps/sec per level plus the overhead of each level
+           relative to "none" -- the number the <5%% acceptance bar in
+           docs/ARCHITECTURE.md section 12 watches.
+parity     the "full" run's final params are asserted bitwise equal to
+           the "none" run's before anything is recorded: a tap that
+           perturbs training is a correctness bug, and a perf entry
+           for it would be meaningless.
+grid       the obs x schedule x transform x fault grid as ONE padded
+           lane batch through ``repro.core.sweep.run_padded_cells``
+           (obs level rides the traced lane state like the other
+           axes), recording ``round_traces`` -- pinned at 1.
+
+Appends one dated git-SHA-keyed entry to
+``benchmarks/results/BENCH_obs.json`` (same append-only rules as
+BENCH_protocol.json).
+
+Run:    PYTHONPATH=src python -m benchmarks.obs
+Smoke:  PYTHONPATH=src python -m benchmarks.obs --smoke
+        (toy sizes; STILL appends -- the entry is flagged
+        ``"smoke": true``.  The scripts/ci.sh obs-smoke lane runs
+        this with --out pointed at a throwaway path.)
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.protocol_bench import (RESULTS, _append_entry,
+                                       _bench_engine, _scan_round)
+from repro.api import ExperimentSpec, build, git_sha
+from repro.core.protocol import train_keys
+from repro.core.sweep import SweepConfig, run_padded_cells
+
+FULL = dict(dataset="mnist", n_clients=3, rounds=2, epochs=2,
+            n_samples=4000, iters=3,
+            grid=dict(client_counts=(2, 3), seeds=(0, 1), rounds=2,
+                      epochs=1, n_samples=1024,
+                      schedules=("sync", "stale_k:1"),
+                      transforms=("none", "int8"),
+                      faults=("none", "crash:0.5")))
+# overhead deltas are a few percent, so even the smoke lane needs
+# enough iterations for the timer to resolve them (a round at these
+# sizes is ~10ms); iters=10 keeps the whole lane under a second
+SMOKE = dict(dataset="mnist", n_clients=3, rounds=1, epochs=1,
+             n_samples=640, iters=10,
+             grid=dict(client_counts=(2, 3), seeds=(0,), rounds=1,
+                       epochs=1, n_samples=512,
+                       schedules=("sync",),
+                       transforms=("none", "int8"),
+                       faults=("none",)))
+
+LEVELS = ("none", "basic", "full")
+
+
+def _final_params(spec):
+    """Train one round stack end to end; return (params, steps/sec)."""
+    sess = build(spec)
+    rr = sess.run()
+    steps = spec.rounds * spec.epochs * sess.federation.n_batches
+    return rr.params, steps / max(rr.timings["wall_s"], 1e-9)
+
+
+def run(smoke=False, results_path=None):
+    """Bench the tap levels, assert tap parity, run the obs grid,
+    append the entry, return bench CSV rows."""
+    cfg = SMOKE if smoke else FULL
+    _, lk = train_keys(jax.random.PRNGKey(0))
+    rkey = jax.random.fold_in(lk, 0)
+    si = jnp.zeros((), jnp.int32)
+
+    base = ExperimentSpec(dataset=cfg["dataset"],
+                          n_clients=cfg["n_clients"],
+                          rounds=cfg["rounds"], epochs=cfg["epochs"],
+                          n_samples=cfg["n_samples"], seeds=(0,),
+                          eval_every=0)
+
+    # parity gate: obs="full" must not perturb training at all
+    p_none, _ = _final_params(base)
+    p_full, _ = _final_params(base.replace(obs="full"))
+    for a, b in zip(jax.tree.leaves(p_none), jax.tree.leaves(p_full)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError(
+                "obs='full' params diverged from obs='none' -- the "
+                "taps are perturbing training; refusing to record a "
+                "perf entry for a broken engine")
+
+    # steady-state throughput per level (same spec_hash by design:
+    # obs is hash-excluded, so all three lanes ARE one experiment)
+    levels, rows = {}, []
+    for level in LEVELS:
+        spec = base.replace(obs=level)
+        fed = build(spec).federation
+        sps = _bench_engine(fed, _scan_round(fed, rkey, si),
+                            fed.pcfg.epochs * fed.n_batches,
+                            iters=cfg["iters"])
+        levels[level] = {"steps_per_sec": sps,
+                         "spec_hash": spec.spec_hash}
+    overhead = {
+        level: 100.0 * (1.0 - levels[level]["steps_per_sec"] /
+                        max(levels["none"]["steps_per_sec"], 1e-9))
+        for level in LEVELS[1:]}
+    for level in LEVELS:
+        extra = ("" if level == "none" else
+                 f"_overhead={overhead[level]:.1f}%")
+        rows.append((f"obs/{level}", 0.0,
+                     f"steps_per_sec="
+                     f"{levels[level]['steps_per_sec']:.1f}{extra}"))
+
+    # the obs grid shares ONE compiled round with every other lane
+    # axis.  Spec grids keep obs grid-common (all levels share one
+    # spec_hash -- obs is hash-excluded, an obs level is not a
+    # different experiment), so the multi-level axis is expressed at
+    # the SweepConfig layer directly.
+    g = cfg["grid"]
+    scfg = SweepConfig(datasets=(cfg["dataset"],),
+                       modes=("devertifl",),
+                       client_counts=g["client_counts"],
+                       seeds=g["seeds"], rounds=g["rounds"],
+                       epochs=g["epochs"],
+                       n_samples=g["n_samples"],
+                       schedules=g["schedules"],
+                       transforms=g["transforms"], faults=g["faults"],
+                       obs=LEVELS)
+    out = run_padded_cells(cfg["dataset"], "devertifl", scfg)
+    rows.append(("obs/grid", 0.0,
+                 f"cells={len(out['cells'])}"
+                 f"_round_traces={out['round_traces']}"))
+
+    entry = {
+        "date": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": git_sha(),
+        "backend": jax.default_backend(),
+        "config": {k: v for k, v in cfg.items() if k != "grid"},
+        "levels": levels,
+        "overhead_pct": overhead,
+        "parity": True,            # the gate above raised otherwise
+        "grid": {"cells": len(out["cells"]),
+                 "round_traces": out["round_traces"],
+                 "lanes": out["lanes"],
+                 "devices": out["devices"]},
+        "smoke": smoke,
+    }
+    if results_path is None:
+        os.makedirs(RESULTS, exist_ok=True)
+        results_path = os.path.join(RESULTS, "BENCH_obs.json")
+    _append_entry(entry, results_path)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Observability tap-overhead bench (appends to "
+                    "BENCH_obs.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes (entry still appended, flagged "
+                         "smoke)")
+    ap.add_argument("--out", default=None,
+                    help="append the entry here instead of "
+                         "benchmarks/results/BENCH_obs.json (CI "
+                         "lanes point this at a throwaway path)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke, results_path=args.out):
+        print(",".join(str(x) for x in r))

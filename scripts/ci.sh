@@ -8,6 +8,7 @@
 #   scripts/ci.sh fault-smoke     # fault-injection suite + bench + audit
 #   scripts/ci.sh wire-smoke      # wire-transform suite + bench + audit
 #   scripts/ci.sh serving-smoke   # federated serving suite + bench
+#   scripts/ci.sh obs-smoke       # observability suite + bench + CLI
 #
 # Lanes: fast (the `fast` pytest marker suite), bench
 # (benchmarks/run.py --smoke: protocol engine + schedule + sweep
@@ -27,6 +28,11 @@
 # serve()==predict() bitwise parity pin, slot-scheduler property
 # suite, and the legacy LM engine -- plus the offered-load serving
 # bench at toy sizes writing a throwaway BENCH_serving.json),
+# obs-smoke (tests/test_obs.py -- the repro.obs subsystem: obs="none"
+# bitwise pins, tap series determinism, compile-once obs lanes, span
+# tracer export, Prometheus exposition, obs checkpoint stamps -- plus
+# the tap-overhead bench smoke writing a throwaway BENCH_obs.json and
+# one `python -m repro.obs` CLI pass exporting a trace),
 # examples (examples/quickstart.py, examples/federated_training.py
 # --smoke, examples/staleness_sweep.py and examples/serving.py
 # --smoke -- keeps the spec-driven README
@@ -43,8 +49,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 LANES=("${@:-all}")
 for lane in "${LANES[@]}"; do
   case "$lane" in
-    all|fast|bench|schedule-smoke|fault-smoke|wire-smoke|serving-smoke|examples|analysis) ;;
-    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke wire-smoke serving-smoke examples analysis)" >&2
+    all|fast|bench|schedule-smoke|fault-smoke|wire-smoke|serving-smoke|obs-smoke|examples|analysis) ;;
+    *) echo "ci.sh: unknown lane '$lane' (lanes: all fast bench schedule-smoke fault-smoke wire-smoke serving-smoke obs-smoke examples analysis)" >&2
        exit 2 ;;
   esac
 done
@@ -109,6 +115,19 @@ if want serving-smoke; then
   # touching benchmarks/results/ (-u: fresh name, no pre-created
   # empty file for the append reader to quarantine)
   python -m benchmarks.serving --smoke --out "$(mktemp -u)"
+fi
+
+if want obs-smoke; then
+  echo "== tests/test_obs.py (observability suite) =="
+  python -m pytest -q tests/test_obs.py
+  echo "== benchmarks/obs.py --smoke =="
+  # --out keeps the smoke entry out of benchmarks/results/ (-u: fresh
+  # name, no pre-created empty file for the append reader to
+  # quarantine)
+  python -m benchmarks.obs --smoke --out "$(mktemp -u)"
+  echo "== python -m repro.obs (CLI smoke + trace export) =="
+  python -m repro.obs --rounds 2 --n-samples 512 \
+    --trace-out "$(mktemp -u --suffix=.json)"
 fi
 
 if want analysis; then

@@ -49,6 +49,7 @@ from repro.core.baselines import SplitNN, SplitNNConfig
 from repro.core.protocol import DeVertiFL, ProtocolConfig, train_keys
 from repro.faults import (RESEED_TAG, DivergenceError, RetryPolicy,
                           diverged)
+from repro.obs import NullTracer, SpanTracer, Telemetry
 
 # 2 (PR 5): specs carry a ``schedule`` field; Session checkpoints grew
 # a ``sched`` subtree (the exchange-schedule scan-carry state -- stale
@@ -66,7 +67,15 @@ from repro.faults import (RESEED_TAG, DivergenceError, RetryPolicy,
 # (transform="none" keeps the PR 7 stamp); ``timings`` gains a "wire"
 # sub-dict (integer bytes-on-wire, raw vs encoded, cumulative and
 # per-round) when a transform is active.  All changes are additive.
-RESULT_SCHEMA_VERSION = 4
+# 5 (PR 10): results carry a unified ``telemetry`` record
+# (repro.obs.Telemetry: wall/steps/fault/wire/obs series/spans); the
+# legacy ``timings`` dict is now DERIVED from it
+# (``telemetry.to_timings()``) and kept as a deprecated alias with its
+# exact historical keys.  The checkpoint stamp folds non-none obs
+# levels in (obs="none" keeps the PR 9 stamp -- obs state rides the
+# checkpointed scan carry, so the stream must match).  All changes
+# are additive.
+RESULT_SCHEMA_VERSION = 5
 _CKPT_NAME = "session"
 
 
@@ -91,19 +100,64 @@ def _schedule_hash(schedule: str) -> str:
 
 
 def _stream_stamp(spec) -> str:
-    """The schedule(+fault)(+wire) identity stamped into checkpoints.
-    With ``fault="none"`` and ``transform="none"`` this is exactly the
-    PR 5 schedule stamp, so pre-fault/pre-wire checkpoints stay
-    resumable; a non-none plan or transform extends the stamped
-    string, so a checkpoint written under one stream can never
-    silently continue under another (the carried fault / wire state --
-    crash countdowns, straggler rings, byte counters -- belongs to its
-    own stream)."""
+    """The schedule(+fault)(+wire)(+obs) identity stamped into
+    checkpoints.  With ``fault="none"``, ``transform="none"`` and
+    ``obs="none"`` this is exactly the PR 5 schedule stamp, so older
+    checkpoints stay resumable; a non-none plan, transform or obs
+    level extends the stamped string, so a checkpoint written under
+    one stream can never silently continue under another (the carried
+    fault / wire / obs state -- crash countdowns, straggler rings,
+    byte counters, metric series -- belongs to its own stream)."""
     ident = spec.schedule if spec.fault == "none" else \
         f"{spec.schedule}|fault={spec.fault}"
     if spec.transform != "none":
         ident = f"{ident}|wire={spec.transform}"
+    if spec.obs != "none":
+        ident = f"{ident}|obs={spec.obs}"
     return _schedule_hash(ident)
+
+
+# obs series slots in the carried sched state (ObsImpl sits outermost,
+# so they live at the top level) -- all [rounds, ...]: their leading
+# axis is the WRITING spec's rounds, which a resume may change
+_OBS_SERIES = ("s_loss", "s_exn", "s_gn", "s_quar", "s_bytes",
+               "s_stale")
+
+
+def _obs_series_like(sched_like, directory, step):
+    """A like-tree whose obs series leaves take the CHECKPOINT's
+    round capacity (axis 0) so the structured load accepts them; any
+    other shape difference is left for load_checkpoint's own error."""
+    out = dict(sched_like)
+    for k in _OBS_SERIES:
+        if k not in out:
+            continue
+        saved = load_entry(directory, step, f"sched/{k}",
+                           name=_CKPT_NAME)
+        have = out[k]
+        if saved is not None and saved.shape != tuple(have.shape) \
+                and saved.shape[1:] == tuple(have.shape)[1:]:
+            out[k] = jnp.zeros(saved.shape, have.dtype)
+    return out
+
+
+def _obs_series_refit(sched, sched_like):
+    """Refit restored series rows to this spec's rounds: zero-pad the
+    tail (rows the resumed run will write) or drop trailing rows that
+    were never written (a checkpoint at round r has rows [0, r), and
+    resume refuses r > spec.rounds)."""
+    out = dict(sched)
+    for k in _OBS_SERIES:
+        if k not in out:
+            continue
+        arr, rows = out[k], sched_like[k].shape[0]
+        if arr.shape[0] > rows:
+            out[k] = arr[:rows]
+        elif arr.shape[0] < rows:
+            pad = [(0, rows - arr.shape[0])] + \
+                [(0, 0)] * (arr.ndim - 1)
+            out[k] = jnp.pad(arr, pad)
+    return out
 
 
 @lru_cache(maxsize=1)
@@ -130,9 +184,13 @@ class RunResult:
     git_sha: str
     metrics: dict                   # final metrics ("f1", "acc", ...)
     history: List[dict] = field(default_factory=list)
+    # DEPRECATED alias: derived from ``telemetry.to_timings()``, kept
+    # with its exact historical keys ("wall_s", "steps_per_sec",
+    # "fault", "wire") for pre-PR-10 consumers
     timings: dict = field(default_factory=dict)
     params: Any = None
     resumed_from: Optional[int] = None
+    telemetry: Optional[Telemetry] = None
     schema_version: int = RESULT_SCHEMA_VERSION
 
     def to_dict(self) -> dict:
@@ -156,6 +214,8 @@ class RunResult:
             "history": clean(self.history),
             "timings": clean(self.timings),
             "resumed_from": self.resumed_from,
+            "telemetry": (None if self.telemetry is None
+                          else self.telemetry.to_dict()),
         }
 
 
@@ -170,7 +230,7 @@ def _protocol_config(spec: ExperimentSpec, internal: str) -> ProtocolConfig:
         exchange_at=spec.exchange_at, mode=internal, fedavg=spec.fedavg,
         seed=spec.seed, n_samples=spec.n_samples, engine=spec.engine,
         first_layer=spec.first_layer, schedule=spec.schedule,
-        fault=spec.fault, transform=spec.transform,
+        fault=spec.fault, transform=spec.transform, obs=spec.obs,
         max_clients=spec.max_clients)
 
 
@@ -188,7 +248,8 @@ def _sweep_config(spec: ExperimentSpec, client_counts,
         faults=(tuple(faults) if faults is not None
                 else (spec.fault,)),
         transforms=(tuple(transforms) if transforms is not None
-                    else (spec.transform,)))
+                    else (spec.transform,)),
+        obs=(spec.obs,))
 
 
 class Session:
@@ -203,6 +264,10 @@ class Session:
         self._fed = None
         self._runner = None
         self._last_params = None
+        # host-side span tracer: armed with the in-scan taps (obs !=
+        # "none"), the zero-overhead NullTracer otherwise
+        self.tracer = SpanTracer() if spec.obs != "none" \
+            else NullTracer()
 
     # ------------------------------------------------------------------
     @property
@@ -213,17 +278,30 @@ class Session:
             raise ValueError(f"mode {self.spec.mode!r} has no DeVertiFL "
                              "federation (it is not a federated mode)")
         if self._fed is None:
-            self._fed = DeVertiFL(
-                _protocol_config(self.spec, self.mode.internal))
+            with self.tracer.span("build", cat="setup",
+                                  dataset=self.spec.dataset):
+                self._fed = DeVertiFL(
+                    _protocol_config(self.spec, self.mode.internal))
         return self._fed
 
-    def _result(self, metrics, history, params, timings,
+    def _result(self, metrics, history, params, telemetry,
                 resumed_from=None) -> RunResult:
+        """The one RunResult construction path.  ``telemetry`` is the
+        unified record; custom-mode runners may still hand over a
+        legacy timings dict, which is lifted through
+        ``Telemetry.from_timings``.  The deprecated ``timings`` alias
+        is derived from the record, never built separately."""
         self._last_params = params
+        if not isinstance(telemetry, Telemetry):
+            telemetry = Telemetry.from_timings(telemetry)
+        if self.tracer.active:
+            telemetry.spans = self.tracer.to_records()
         return RunResult(spec=self.spec, spec_hash=self.spec.spec_hash,
                          git_sha=git_sha(), metrics=metrics,
-                         history=history, timings=timings, params=params,
-                         resumed_from=resumed_from)
+                         history=history,
+                         timings=telemetry.to_timings(), params=params,
+                         resumed_from=resumed_from,
+                         telemetry=telemetry)
 
     # ------------------------------------------------------------------
     def run(self, key=None, retry="auto") -> RunResult:
@@ -323,37 +401,52 @@ class Session:
                 if got_sched is None:
                     if spec.schedule != "sync" or \
                             spec.fault != "none" or \
-                            spec.transform != "none":
+                            spec.transform != "none" or \
+                            spec.obs != "none":
                         raise ValueError(
                             f"checkpoint in {spec.checkpoint_dir!r} "
                             "carries no schedule stamp (written by a "
                             "pre-schedule writer, i.e. under "
                             "schedule='sync', fault='none', "
-                            "transform='none'); it cannot resume "
-                            f"under schedule={spec.schedule!r} / "
-                            f"fault={spec.fault!r} / "
-                            f"transform={spec.transform!r} -- the "
-                            "saved state has no schedule, fault or "
-                            "wire buffers to restore")
+                            "transform='none', obs='none'); it cannot "
+                            f"resume under schedule={spec.schedule!r} "
+                            f"/ fault={spec.fault!r} / "
+                            f"transform={spec.transform!r} / "
+                            f"obs={spec.obs!r} -- the saved state has "
+                            "no schedule, fault, wire or obs buffers "
+                            "to restore")
                 elif not np.array_equal(got_sched, want_sched):
                     raise ValueError(
                         f"checkpoint in {spec.checkpoint_dir!r} was "
                         "written under a different exchange schedule, "
-                        "fault plan or wire transform than this "
-                        f"spec's (schedule={spec.schedule!r}, "
+                        "fault plan or wire transform (or obs level) "
+                        f"than this spec's (schedule={spec.schedule!r}, "
                         f"fault={spec.fault!r}, "
-                        f"transform={spec.transform!r}): resuming "
-                        "would splice mismatched scan state (stale "
-                        "buffers / participation stream / fault "
-                        "countdowns / byte counters) into this run; "
-                        "rebuild the spec with the original "
-                        "schedule+fault+transform or use a fresh "
+                        f"transform={spec.transform!r}, "
+                        f"obs={spec.obs!r}): resuming would splice "
+                        "mismatched scan state (stale buffers / "
+                        "participation stream / fault countdowns / "
+                        "byte counters / metric series) into this "
+                        "run; rebuild the spec with the original "
+                        "schedule+fault+transform+obs or use a fresh "
                         "checkpoint_dir")
                 like = dict(like_base)
                 if got_sched is not None:
                     like["schedule_hash"] = want_sched
+                if spec.obs != "none":
+                    # obs series capacity equals the WRITER's rounds
+                    # (the arrays are [rounds, ...]); resuming under a
+                    # different rounds= only reshapes those rows, so
+                    # load into the saved shape and refit below --
+                    # unlike ring buffers, a series row per round is
+                    # not trajectory state
+                    like["sched"] = _obs_series_like(
+                        like["sched"], spec.checkpoint_dir, cand)
                 state = load_checkpoint(spec.checkpoint_dir, cand,
                                         like, name=_CKPT_NAME)
+                if spec.obs != "none":
+                    state["sched"] = _obs_series_refit(
+                        state["sched"], like_base["sched"])
                 step = cand
                 break
             except CheckpointCorruptError as e:
@@ -444,7 +537,8 @@ class Session:
         return FederatedServer(fed.model, fed.pcfg, fed.layout, params,
                                spec_hash=self.spec.spec_hash,
                                max_slots=max_slots, queue_cap=queue_cap,
-                               cache=cache, overflow=overflow)
+                               cache=cache, overflow=overflow,
+                               tracer=self.tracer)
 
     def serve(self, requests, params=None, **server_kw):
         """Batch convenience over :meth:`server`: submit every
@@ -504,14 +598,17 @@ class Session:
                 # that never trip are bitwise the watchdog-free run
                 rkey = jax.random.fold_in(
                     jax.random.fold_in(rkey, RESEED_TAG), attempt)
-            if spec.engine == "scan":
-                params, opt_state, step_idx, sched_state, losses = \
-                    fed._round(params, opt_state, step_idx, sched_state,
-                               rkey, fed._xtr, fed._ytr, fed._lay)
-            else:
-                params, opt_state, step_idx, sched_state, losses = \
-                    fed._python_round(params, opt_state, step_idx,
-                                      sched_state, rkey)
+            with self.tracer.span("round", cat="train", round=r,
+                                  attempt=attempt):
+                if spec.engine == "scan":
+                    params, opt_state, step_idx, sched_state, losses =\
+                        fed._round(params, opt_state, step_idx,
+                                   sched_state, rkey, fed._xtr,
+                                   fed._ytr, fed._lay)
+                else:
+                    params, opt_state, step_idx, sched_state, losses =\
+                        fed._python_round(params, opt_state, step_idx,
+                                          sched_state, rkey)
             if policy is not None and \
                     diverged(losses, policy.loss_threshold):
                 trips += 1
@@ -544,31 +641,36 @@ class Session:
                 snapshot = _copy_state(
                     (params, opt_state, step_idx, sched_state))
             if spec.eval_every and (r + 1) % spec.eval_every == 0:
-                ev = fed.evaluate(params)
+                with self.tracer.span("eval", cat="eval", round=r):
+                    ev = fed.evaluate(params)
                 ev["round"] = r
                 ev["loss"] = float(losses[-1])
                 ev["round_losses"] = np.asarray(losses)
                 history.append(ev)
             if spec.checkpoint_every and \
                     (r + 1) % spec.checkpoint_every == 0:
-                save_checkpoint(
-                    spec.checkpoint_dir, r + 1,
-                    {"params": params, "opt_state": opt_state,
-                     "step_idx": step_idx, "sched": sched_state,
-                     "resume_hash": _hash_array(spec.resume_hash),
-                     "schedule_hash": _hash_array(_stream_stamp(spec))},
-                    name=_CKPT_NAME)
+                with self.tracer.span("checkpoint", cat="ckpt",
+                                      round=r):
+                    save_checkpoint(
+                        spec.checkpoint_dir, r + 1,
+                        {"params": params, "opt_state": opt_state,
+                         "step_idx": step_idx, "sched": sched_state,
+                         "resume_hash": _hash_array(spec.resume_hash),
+                         "schedule_hash":
+                             _hash_array(_stream_stamp(spec))},
+                        name=_CKPT_NAME)
             r += 1
         jax.block_until_ready(params)
         wall = time.perf_counter() - t0
-        final = fed.evaluate(params)
+        with self.tracer.span("eval", cat="eval", round=-1):
+            final = fed.evaluate(params)
         rounds_run = spec.rounds - start_round
         steps = rounds_run * spec.epochs * fed.n_batches
-        timings = {"wall_s": wall,
-                   "steps_per_sec": steps / max(wall, 1e-9)}
+        telemetry = Telemetry(wall_s=wall, steps=steps,
+                              steps_per_sec=steps / max(wall, 1e-9))
         tel = fed.fault_telemetry(sched_state)
         if tel is not None or policy is not None:
-            timings["fault"] = {
+            telemetry.fault = {
                 **({k: int(v) for k, v in tel.items()} if tel else {}),
                 "watchdog_trips": trips, "retries": retries}
         wtel = fed.wire_telemetry(sched_state)
@@ -578,11 +680,14 @@ class Session:
             # since round 0 (the checkpoint restores them)
             raw = int(wtel["raw_bytes"])
             enc = int(wtel["encoded_bytes"])
-            timings["wire"] = {
+            telemetry.wire = {
                 "raw_bytes": raw, "encoded_bytes": enc,
                 "raw_bytes_per_round": raw // max(spec.rounds, 1),
                 "encoded_bytes_per_round": enc // max(spec.rounds, 1)}
-        return self._result(final, history, params, timings,
+        # obs per-round series ride the same carry (and the same
+        # checkpoint), so a resumed run's series cover rounds 0..R
+        telemetry.series = fed.obs_series(sched_state)
+        return self._result(final, history, params, telemetry,
                             resumed_from=resumed_from)
 
     def _run_cell(self) -> RunResult:
@@ -596,13 +701,12 @@ class Session:
                    "acc_per_seed": cell["acc_per_seed"],
                    "final_loss_mean": cell["final_loss_mean"],
                    "seeds": cell["seeds"]}
-        timings = {"wall_s": cell["wall_s"],
-                   "steps_per_sec": cell["steps_per_sec"]}
-        if "fault_telemetry" in cell:
-            timings["fault"] = cell["fault_telemetry"]
-        if "wire" in cell:
-            timings["wire"] = cell["wire"]
-        return self._result(metrics, [], None, timings)
+        telemetry = Telemetry(wall_s=cell["wall_s"],
+                              steps_per_sec=cell["steps_per_sec"],
+                              fault=cell.get("fault_telemetry"),
+                              wire=cell.get("wire"),
+                              series=cell.get("obs_series"))
+        return self._result(metrics, [], None, telemetry)
 
     def _splitnn_config(self, seed) -> SplitNNConfig:
         spec = self.spec
@@ -636,7 +740,8 @@ class Session:
                        "f1_per_seed": f1s, "acc_per_seed": accs,
                        "seeds": list(spec.seeds)}
         wall = time.perf_counter() - t0
-        return self._result(metrics, [], params, {"wall_s": wall})
+        return self._result(metrics, [], params,
+                            Telemetry(wall_s=wall))
 
 
 def build(spec: ExperimentSpec) -> Session:
@@ -653,7 +758,7 @@ def build(spec: ExperimentSpec) -> Session:
 # vmapped lane axes)
 _GRID_COMMON = ("seeds", "rounds", "epochs", "batch_size", "lr",
                 "exchange_at", "fedavg", "engine", "first_layer",
-                "n_samples", "shard")
+                "n_samples", "shard", "obs")
 
 
 def spec_grid(datasets=("mnist", "fmnist", "titanic", "bank"),

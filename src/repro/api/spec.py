@@ -43,9 +43,12 @@ from repro.configs import get_config
 from repro.data import registry as DR
 
 # knobs that change what is *recorded*, not what is *computed* -- kept
-# out of spec_hash so observation settings don't fork experiment ids
+# out of spec_hash so observation settings don't fork experiment ids.
+# "obs" belongs here by construction: taps are observation-only
+# (obs="full" trajectories are bitwise obs="none" trajectories,
+# tests/test_obs.py pins it), so the level must not fork ids.
 HASH_EXCLUDE = ("eval_every", "checkpoint_dir", "checkpoint_every",
-                "shard")
+                "shard", "obs")
 
 ENGINES = ("scan", "python")
 
@@ -87,6 +90,12 @@ class ExperimentSpec:
     # default "none" is EXCLUDED from spec_hash so every pre-existing
     # spec keeps its id.
     transform: str = "none"
+    # Observability level (repro.obs spec string, validated against
+    # the obs registry): "none" | "basic" | "full" | a register_obs
+    # name.  Non-none levels arm in-scan metric taps + the host span
+    # tracer under devertifl federations only.  Observation-only --
+    # never changes a trajectory -- so it lives in HASH_EXCLUDE.
+    obs: str = "none"
     max_clients: Optional[int] = None   # pad client axis with dead slots
     shard: Union[str, bool, int] = "auto"   # grid lanes: "auto"|False|int
     n_samples: Optional[int] = None     # dataset size override (speed)
@@ -151,6 +160,14 @@ class ExperimentSpec:
                 "(the transformed dataflow is the forward "
                 f"HiddenOutputExchange); mode {self.mode!r} supports "
                 "transform='none' only")
+        from repro.obs import get_obs_plan
+        op = get_obs_plan(self.obs)              # raises w/ options
+        object.__setattr__(self, "obs", op.spec)
+        if not op.is_none and mode.internal != "devertifl":
+            raise ValueError(
+                f"obs level {op.spec!r} requires mode='devertifl' "
+                "(the taps ride the exchange engine's scan carry); "
+                f"mode {self.mode!r} supports obs='none' only")
         if self.first_layer == "auto":
             # resolve backend-dependent "auto" NOW so the spec (and
             # its hash) records the lane that actually runs -- two

@@ -146,6 +146,12 @@ class ProtocolConfig:
     # "topk:0.5+int8+dp:0.1" wrap the engine impl in the wire
     # encode-decode round trip (devertifl mode only).
     transform: str = "none"
+    # Observability level (repro.obs spec string): what the engine
+    # records about itself.  "none" is the untouched engine path;
+    # "basic"/"full" wrap the engine impl in in-scan metric taps
+    # (devertifl mode only).  Observation-only: taps never change a
+    # trajectory.
+    obs: str = "none"
     # Pad the client axis to this length with dead (masked) slots; None
     # means no padding. Live trajectories are bit-for-bit unchanged --
     # padding only buys shape-uniformity across client counts.
@@ -254,16 +260,18 @@ def resolve_schedule(pcfg, model, n_train):
 
 
 def resolve_engine(pcfg, model, n_train):
-    """pcfg.schedule + pcfg.fault + pcfg.transform -> (Schedule,
-    impl).  With ``fault="none"`` and ``transform="none"`` this IS
-    :func:`resolve_schedule` -- same objects, same (possibly None)
-    impl, so the adversity-free engine stays bit-for-bit the
-    pre-fault, pre-wire one and literal sync keeps its legacy path.
-    Non-none plans (devertifl only) wrap the schedule impl in the
-    fault state machine and then the wire transform (the chain is
-    schedule -> fault -> wire, wire outermost so it transforms what
-    the inner machinery buffers/screens); literal sync is first
-    promoted to a depth-0 ring impl (``stale_k:0``, proven
+    """pcfg.schedule + pcfg.fault + pcfg.transform + pcfg.obs ->
+    (Schedule, impl).  With ``fault="none"``, ``transform="none"``
+    and ``obs="none"`` this IS :func:`resolve_schedule` -- same
+    objects, same (possibly None) impl, so the adversity-free engine
+    stays bit-for-bit the pre-fault, pre-wire, pre-obs one and
+    literal sync keeps its legacy path.  Non-none plans (devertifl
+    only) wrap the schedule impl in the fault state machine, then the
+    wire transform, then the metric taps (the chain is schedule ->
+    fault -> wire -> obs: wire outermost of the machinery so it
+    transforms what the inner layers buffer/screen, obs outermost of
+    all so it observes exactly what is released); literal sync is
+    first promoted to a depth-0 ring impl (``stale_k:0``, proven
     bitwise-sync by tests/test_schedule.py) so the wrappers have hooks
     to ride."""
     sched, impl = resolve_schedule(pcfg, model, n_train)
@@ -296,6 +304,16 @@ def resolve_engine(pcfg, model, n_train):
                 f"mode {pcfg.mode!r} supports transform='none' only")
         impl = make_wire_impl(wire, promoted(impl),
                               pcfg.padded_clients, bs, width)
+    obs = getattr(pcfg, "obs", "none")
+    from repro.obs import get_obs_plan, make_obs_impl
+    op = get_obs_plan(obs)
+    if not op.is_none:
+        if pcfg.mode != "devertifl":
+            raise ValueError(
+                f"obs level {op.spec!r} requires mode='devertifl'; "
+                f"mode {pcfg.mode!r} supports obs='none' only")
+        impl = make_obs_impl(op, promoted(impl), pcfg.padded_clients,
+                             bs, width, rounds=pcfg.rounds)
     return sched, impl
 
 
@@ -893,6 +911,12 @@ class DeVertiFL:
         (repro.wire), or None when no transform is active."""
         tel = getattr(self._impl, "wire_telemetry", None)
         return None if tel is None else tel(sched_state)
+
+    def obs_series(self, sched_state):
+        """Per-round metric series carried in the scan state
+        (repro.obs), as numpy arrays, or None when obs='none'."""
+        ser = getattr(self._impl, "obs_series", None)
+        return None if ser is None else ser(sched_state)
 
     def set_fedavg(self, fedavg_fn):
         """Swap the aggregation function (e.g. weighted FedAvg) and

@@ -121,6 +121,13 @@ class SweepConfig:
     # transforms run devertifl mode only; custom transforms cannot
     # ride a lane axis.
     transforms: Sequence[str] = ("none",)
+    # Observability lane axis (repro.obs spec strings).  The level
+    # gates ride the traced obs state, so an obs x transform x fault
+    # x schedule grid shares the one compiled round too.  Taps are
+    # observation-only: a non-none obs lane's trajectory is bitwise
+    # its none lane's.  Non-none levels run devertifl mode only;
+    # custom obs impls cannot ride a lane axis.
+    obs: Sequence[str] = ("none",)
 
 
 # ---------------------------------------------------------------------------
@@ -339,6 +346,77 @@ def _stacked_wire_state(impl, wires, plans, scheds, n_base,
 
 
 # ---------------------------------------------------------------------------
+# observability (obs) lanes
+# ---------------------------------------------------------------------------
+def _sweep_obs(scfg, mode, model, n_clients, n_train, impl):
+    """Parse scfg.obs into (obss, impl, none_only) for a lane batch of
+    one (dataset, mode).  A none-only axis hands the
+    schedule/fault/wire impl back untouched -- the obs-free sweep is
+    bit-for-bit the pre-obs one.  Mixed obs lanes share ONE ObsImpl:
+    the level gates are traced per-lane state, so obs x transform x
+    fault x schedule grids ride the single compiled round.  Like the
+    fault and wire layers, literal sync under an obs axis is promoted
+    to the depth-0 ring impl so the taps have four-hook state to
+    wrap; custom obs impls may close over per-federation statics and
+    are refused."""
+    from repro.obs import get_obs_plan, make_obs_impl
+    if not scfg.obs:
+        raise ValueError("obs must name at least one obs level")
+    obss = tuple(get_obs_plan(o) for o in scfg.obs)
+    if len(obss) == 1 and obss[0].is_none:
+        return obss, impl, True
+    if mode != "devertifl":
+        raise ValueError(
+            f"obs levels beyond 'none' require mode='devertifl' sweep "
+            f"cells, got mode {mode!r}")
+    if any(o.custom is not None for o in obss):
+        raise ValueError(
+            "custom obs impls are not supported in sweep lanes (their "
+            "impls may close over per-federation statics the lane "
+            "vmap cannot vary); run them as standalone sessions")
+    from repro.core.protocol import exchange_width
+    bs = min(scfg.batch_size, n_train)
+    width = exchange_width(model, scfg.exchange_at)
+    if impl is None:
+        from repro.schedule import LaneScheduleImpl
+        impl = LaneScheduleImpl(0, n_clients, bs, width)
+    # build at the HIGHEST stacked level: tap work above the impl's
+    # static level is not traced at all, and every lane must share
+    # one trace -- lower-level lanes gate it off with traced zeros
+    top = max(obss, key=lambda o: o.level)
+    impl = make_obs_impl(top, impl, n_clients, bs, width,
+                         rounds=scfg.rounds)
+    return obss, impl, False
+
+
+def _stacked_obs_state(impl, obss, wires, plans, scheds, n_base,
+                       fault_none_only, wire_none_only,
+                       obs_none_only):
+    """Per-lane initial carry states, obs-major over the
+    transform-major-over-fault-major-over-schedule-major base ((obs,
+    wire, plan, sched) blocks of n_base lanes each).  A none-only obs
+    axis reduces to :func:`_stacked_wire_state`."""
+    if obs_none_only:
+        return _stacked_wire_state(impl, wires, plans, scheds, n_base,
+                                   fault_none_only, wire_none_only)
+    per = []
+    for op in obss:
+        for wp in wires:
+            for pl in plans:
+                kw = {"obs": op}
+                if not wire_none_only:
+                    kw["wire"] = wp
+                if not fault_none_only:
+                    kw["plan"] = pl
+                for sc in scheds:
+                    per.append(jax.tree.map(
+                        lambda a: jnp.broadcast_to(
+                            a, (n_base,) + a.shape),
+                        impl.init_state(sc, **kw)))
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *per)
+
+
+# ---------------------------------------------------------------------------
 # lane stacking
 # ---------------------------------------------------------------------------
 def _stacked_federations(dataset, n_clients, seeds, n_samples):
@@ -458,13 +536,17 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         raise ValueError(
             "run_cell takes exactly one transform; use "
             "run_padded_cells(transforms=...) for wire grids")
+    if len(scfg.obs) != 1:
+        raise ValueError(
+            "run_cell takes exactly one obs level; use "
+            "run_padded_cells(obs=...) for obs grids")
     pcfg = ProtocolConfig(
         dataset=dataset, n_clients=n_clients, rounds=scfg.rounds,
         epochs=scfg.epochs, batch_size=scfg.batch_size, lr=scfg.lr,
         exchange_at=scfg.exchange_at, mode=mode, fedavg=scfg.fedavg,
         n_samples=scfg.n_samples, first_layer=scfg.first_layer,
         schedule=scfg.schedules[0], fault=scfg.faults[0],
-        transform=scfg.transforms[0])
+        transform=scfg.transforms[0], obs=scfg.obs[0])
     model = PaperMLP(get_config(arch_for(dataset)))
     opt = adam(pcfg.lr, max_grad_norm=None)
 
@@ -477,8 +559,11 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
                                            n_train, impl)
     wires, impl, wire_none = _sweep_transforms(scfg, mode, model,
                                                n_clients, n_train, impl)
-    sched_state = _stacked_wire_state(impl, wires, plans, scheds,
-                                      n_seeds, none_only, wire_none)
+    obss, impl, obs_none = _sweep_obs(scfg, mode, model, n_clients,
+                                      n_train, impl)
+    sched_state = _stacked_obs_state(impl, obss, wires, plans, scheds,
+                                     n_seeds, none_only, wire_none,
+                                     obs_none)
 
     def init_one(key):
         init_key, loop_key = train_keys(key)
@@ -523,6 +608,10 @@ def run_cell(dataset, mode, n_clients, scfg: SweepConfig):
         cell["transform"] = wires[0].spec
         wtel = impl.wire_telemetry(sched_state)
         cell["wire"] = {k: int(np.sum(v)) for k, v in wtel.items()}
+    if not obs_none:
+        cell["obs"] = obss[0].spec
+        # per-round series with a leading seed axis [S, R, ...]
+        cell["obs_series"] = impl.obs_series(sched_state)
     return cell
 
 
@@ -598,6 +687,8 @@ class LaneBatch(NamedTuple):
     impl: object = None         # the resolved lane impl (None = sync)
     wires: tuple = ()           # parsed WirePlans (transform lane axis)
     wire_none_only: bool = True  # wire axis is the default ("none",)
+    obss: tuple = ()            # parsed ObsPlans (obs lane axis)
+    obs_none_only: bool = True  # obs axis is the default ("none",)
 
     @property
     def n_lanes(self) -> int:
@@ -645,7 +736,10 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
                                            n_train, impl)
     wires, impl, wire_none = _sweep_transforms(scfg, mode, model,
                                                max_c, n_train, impl)
-    n_sched, n_fault, n_wire = len(scheds), len(plans), len(wires)
+    obss, impl, obs_none = _sweep_obs(scfg, mode, model, max_c,
+                                      n_train, impl)
+    n_sched, n_fault = len(scheds), len(plans)
+    n_wire, n_obs = len(wires), len(obss)
 
     # per-count init (live keys must be split(init_key, nc) -- a
     # count-static derivation -- so init compiles once per count;
@@ -663,12 +757,13 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
     opt_state = jax.tree.map(lambda *a: jnp.concatenate(a), *os_)
     loop_keys = jnp.concatenate(lks)
 
-    # wire-major-over-fault-major-over-schedule-major lane tiling:
-    # every (wire, fault, schedule) triple reuses the SAME (count x
-    # seed) base batch -- same data, same layouts, same inits, same
-    # key streams -- and differs only in the per-lane carry state
-    # (traced k / p / rates / keep fractions + buffers)
-    n_tile = n_wire * n_fault * n_sched
+    # obs-major-over-wire-major-over-fault-major-over-schedule-major
+    # lane tiling: every (obs, wire, fault, schedule) tuple reuses the
+    # SAME (count x seed) base batch -- same data, same layouts, same
+    # inits, same key streams -- and differs only in the per-lane
+    # carry state (traced k / p / rates / keep fractions / level
+    # gates + buffers)
+    n_tile = n_obs * n_wire * n_fault * n_sched
     if n_tile > 1:
         def tile(a):
             return jnp.concatenate([a] * n_tile, 0)
@@ -677,10 +772,11 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
         loop_keys = tile(loop_keys)
         params = jax.tree.map(tile, params)
         opt_state = jax.tree.map(tile, opt_state)
-    sched_state = _stacked_wire_state(impl, wires, plans, scheds,
-                                      n_base, none_only, wire_none)
-    lanes = tuple((nc, s) for _ in wires for _ in plans for _ in scheds
-                  for (nc, s) in base_lanes)
+    sched_state = _stacked_obs_state(impl, obss, wires, plans, scheds,
+                                     n_base, none_only, wire_none,
+                                     obs_none)
+    lanes = tuple((nc, s) for _ in obss for _ in wires for _ in plans
+                  for _ in scheds for (nc, s) in base_lanes)
 
     round_fn = make_round_fn(model, opt, pcfg, n_train,
                              first_layer_fn=first, sched_impl=impl)
@@ -692,7 +788,8 @@ def build_lane_batch(dataset, mode, scfg: SweepConfig,
                      sync_only=sync_only, n_train=n_train,
                      n_base=n_base, width=width, plans=plans,
                      none_only=none_only, impl=impl, wires=wires,
-                     wire_none_only=wire_none)
+                     wire_none_only=wire_none, obss=obss,
+                     obs_none_only=obs_none)
 
 
 def run_padded_cells(dataset, mode, scfg, shard="auto"):
@@ -712,11 +809,15 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     non-default fault axis prepends the plan
     (``"{fault}/{schedule}/{n_clients}"``); a non-default transform
     axis prepends the wire spec on top
-    (``"{transform}/{fault}/{schedule}/{n_clients}"``).  Each
+    (``"{transform}/{fault}/{schedule}/{n_clients}"``); a non-default
+    obs axis prepends the level on top of everything
+    (``"{obs}/{transform}/{fault}/{schedule}/{n_clients}"``).  Each
     cell_dict has the run_cell schema plus ``"schedule"`` (under a
     fault axis, ``"fault"`` + per-cell ``"fault_telemetry"`` event
     counts summed over seeds; under a transform axis, ``"transform"``
-    + per-cell ``"wire"`` integer bytes-on-wire summed over seeds)
+    + per-cell ``"wire"`` integer bytes-on-wire summed over seeds;
+    under an obs axis, ``"obs"`` + per-cell ``"obs_series"``
+    per-round series with a leading seed axis)
     -- except that wall_s is the SHARED batch wall and
     each cell's steps_per_sec is its lanes' share of it (cells sum to
     the batch's steps_per_sec).  round_traces counts actual retraces
@@ -737,6 +838,7 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
     round_fn, lanes, sync_only = lb.round_fn, lb.lanes, lb.sync_only
     plans, none_only = lb.plans, lb.none_only
     wires, wire_none = lb.wires, lb.wire_none_only
+    obss, obs_none = lb.obss, lb.obs_none_only
     traces = 0
 
     def counted_round(*args):
@@ -769,56 +871,71 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
                                                       n_train).n_batches
     cells = {}
     s = len(scfg.seeds)
-    for wi, wp in enumerate(wires):
-        for fi, pl in enumerate(plans):
-            for si, sc in enumerate(scheds):
-                for ci, nc in enumerate(counts):
-                    lo = ((wi * len(plans) + fi) * len(scheds)
-                          + si) * n_base + ci * s
-                    sl = slice(lo, lo + s)
-                    if not wire_none:
-                        ck = f"{wp.spec}/{pl.spec}/{sc.spec}/{nc}"
-                    elif not none_only:
-                        ck = f"{pl.spec}/{sc.spec}/{nc}"
-                    elif not sync_only:
-                        ck = f"{sc.spec}/{nc}"
-                    else:
-                        ck = nc
-                    cell = {
-                        "dataset": dataset, "mode": mode,
-                        "n_clients": nc,
-                        "schedule": sc.spec,
-                        "seeds": list(scfg.seeds),
-                        "f1_per_seed": f1s[sl],
-                        "acc_per_seed": accs[sl],
-                        "f1_mean": float(np.mean(f1s[sl])),
-                        "f1_std": float(np.std(f1s[sl])),
-                        "acc_mean": float(np.mean(accs[sl])),
-                        "final_loss_mean":
-                            float(losses_np[sl, -1].mean()),
-                        # the whole multi-count batch trains together,
-                        # so wall_s is SHARED across this group's
-                        # cells and each cell's steps_per_sec is its
-                        # own lanes' steps over that shared wall
-                        # (cells sum to the batch throughput -- do not
-                        # read a single padded cell's rate as a
-                        # run_cell-style standalone measurement)
-                        "wall_s": wall,
-                        "steps_per_sec": steps * s / max(wall, 1e-9),
-                    }
-                    if not none_only:
-                        cell["fault"] = pl.spec
-                        tel = lb.impl.telemetry(
-                            jax.tree.map(lambda a: a[sl], sched_state))
-                        cell["fault_telemetry"] = {
-                            k: int(np.sum(v)) for k, v in tel.items()}
-                    if not wire_none:
-                        cell["transform"] = wp.spec
-                        wtel = lb.impl.wire_telemetry(
-                            jax.tree.map(lambda a: a[sl], sched_state))
-                        cell["wire"] = {k: int(np.sum(v))
-                                        for k, v in wtel.items()}
-                    cells[ck] = cell
+    for oi, op in enumerate(obss):
+        for wi, wp in enumerate(wires):
+            for fi, pl in enumerate(plans):
+                for si, sc in enumerate(scheds):
+                    for ci, nc in enumerate(counts):
+                        lo = (((oi * len(wires) + wi) * len(plans)
+                               + fi) * len(scheds)
+                              + si) * n_base + ci * s
+                        sl = slice(lo, lo + s)
+                        if not obs_none:
+                            ck = (f"{op.spec}/{wp.spec}/{pl.spec}/"
+                                  f"{sc.spec}/{nc}")
+                        elif not wire_none:
+                            ck = f"{wp.spec}/{pl.spec}/{sc.spec}/{nc}"
+                        elif not none_only:
+                            ck = f"{pl.spec}/{sc.spec}/{nc}"
+                        elif not sync_only:
+                            ck = f"{sc.spec}/{nc}"
+                        else:
+                            ck = nc
+                        cell = {
+                            "dataset": dataset, "mode": mode,
+                            "n_clients": nc,
+                            "schedule": sc.spec,
+                            "seeds": list(scfg.seeds),
+                            "f1_per_seed": f1s[sl],
+                            "acc_per_seed": accs[sl],
+                            "f1_mean": float(np.mean(f1s[sl])),
+                            "f1_std": float(np.std(f1s[sl])),
+                            "acc_mean": float(np.mean(accs[sl])),
+                            "final_loss_mean":
+                                float(losses_np[sl, -1].mean()),
+                            # the whole multi-count batch trains
+                            # together, so wall_s is SHARED across
+                            # this group's cells and each cell's
+                            # steps_per_sec is its own lanes' steps
+                            # over that shared wall (cells sum to the
+                            # batch throughput -- do not read a
+                            # single padded cell's rate as a
+                            # run_cell-style standalone measurement)
+                            "wall_s": wall,
+                            "steps_per_sec":
+                                steps * s / max(wall, 1e-9),
+                        }
+                        if not none_only:
+                            cell["fault"] = pl.spec
+                            tel = lb.impl.telemetry(jax.tree.map(
+                                lambda a: a[sl], sched_state))
+                            cell["fault_telemetry"] = {
+                                k: int(np.sum(v))
+                                for k, v in tel.items()}
+                        if not wire_none:
+                            cell["transform"] = wp.spec
+                            wtel = lb.impl.wire_telemetry(
+                                jax.tree.map(lambda a: a[sl],
+                                             sched_state))
+                            cell["wire"] = {k: int(np.sum(v))
+                                            for k, v in wtel.items()}
+                        if not obs_none:
+                            cell["obs"] = op.spec
+                            # per-round series, leading seed axis
+                            cell["obs_series"] = lb.impl.obs_series(
+                                jax.tree.map(lambda a: a[sl],
+                                             sched_state))
+                        cells[ck] = cell
     out = {"cells": cells, "round_traces": traces, "lanes": n_lanes,
            "devices": n_dev, "wall_s": wall,
            "schedules": [sc.spec for sc in scheds],
@@ -828,6 +945,8 @@ def run_padded_cells(dataset, mode, scfg, shard="auto"):
         out["faults"] = [pl.spec for pl in plans]
     if not wire_none:
         out["transforms"] = [w.spec for w in wires]
+    if not obs_none:
+        out["obs"] = [o.spec for o in obss]
     return out
 
 

@@ -1,0 +1,189 @@
+"""Host-side span tracing: where the wall-clock time of a run or a
+serving session actually went.
+
+:class:`SpanTracer` records nested context-manager spans
+(``with tracer.span("round", cat="train", round=r): ...``) and point
+instants with microsecond wall-clock timestamps.  It is strictly a
+HOST-side instrument -- it never touches traced values, so arming it
+cannot perturb trajectories -- and its whole cost is two
+``perf_counter`` calls plus one dict append per span.
+
+Exports:
+
+  export(path)   Chrome trace-event JSON (the ``{"traceEvents":
+                 [...]}`` container of "X" complete events + "i"
+                 instants) -- loadable in Perfetto / chrome://tracing.
+  summary()      a human-readable per-span-name aggregate table
+                 (count, total ms, mean ms, share of traced wall).
+  to_records()   the raw span dicts, JSON-safe -- what the unified
+                 Telemetry record embeds.
+
+:class:`NullTracer` is the ``obs="none"`` stand-in: every method is a
+no-op (``span`` returns one shared nullcontext), so instrumented call
+sites cost one attribute lookup when tracing is off -- the
+zero-overhead-when-off invariant (docs/ARCHITECTURE.md section 12).
+
+``profile_to(dir)`` optionally brackets a region with
+``jax.profiler.start_trace/stop_trace`` so a device-level profile can
+be captured alongside the host spans; it degrades to a plain span when
+the profiler is unavailable on this backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from contextlib import contextmanager
+from typing import List, Optional
+
+
+class SpanTracer:
+    """Nested wall-clock spans with Chrome trace-event export."""
+
+    active = True
+
+    def __init__(self):
+        self.records: List[dict] = []   # closed spans + instants
+        self._depth = 0
+        self._t0 = time.perf_counter()
+        self._pid = os.getpid()
+
+    # ------------------------------------------------------------------
+    def _us(self, t: float) -> float:
+        return (t - self._t0) * 1e6
+
+    @contextmanager
+    def span(self, name: str, cat: str = "run", **args):
+        """Record one nested span around the with-body."""
+        depth = self._depth
+        self._depth += 1
+        t_in = time.perf_counter()
+        try:
+            yield
+        finally:
+            t_out = time.perf_counter()
+            self._depth = depth
+            self.records.append({
+                "name": name, "cat": cat, "ph": "X",
+                "ts": self._us(t_in),
+                "dur": (t_out - t_in) * 1e6,
+                "depth": depth, "args": args})
+
+    def instant(self, name: str, cat: str = "run", **args):
+        """Record a point event (a request lifecycle edge)."""
+        self.records.append({
+            "name": name, "cat": cat, "ph": "i",
+            "ts": self._us(time.perf_counter()),
+            "dur": 0.0, "depth": self._depth, "args": args})
+
+    @contextmanager
+    def profile_to(self, profile_dir: Optional[str]):
+        """A span that additionally captures a ``jax.profiler`` device
+        trace into ``profile_dir``.  ``None`` is a pure no-op (no span
+        either -- the caller asked for nothing); an unavailable
+        profiler degrades to the plain span."""
+        if not profile_dir:
+            yield
+            return
+        started = False
+        try:
+            import jax
+            jax.profiler.start_trace(profile_dir)
+            started = True
+        except Exception:
+            started = False
+        try:
+            with self.span("jax_profile", cat="profiler",
+                           dir=profile_dir):
+                yield
+        finally:
+            if started:
+                import jax
+                jax.profiler.stop_trace()
+
+    # ------------------------------------------------------------------
+    def to_records(self) -> List[dict]:
+        """The raw span/instant dicts (JSON-safe; args stringified)."""
+        return [{**r, "args": {k: _safe(v)
+                               for k, v in r["args"].items()}}
+                for r in self.records]
+
+    def export(self, path: str) -> str:
+        """Write Chrome trace-event JSON (Perfetto-loadable); returns
+        ``path``.  Spans map to "X" complete events on one pid/tid so
+        the viewer reconstructs the nesting from ts/dur containment."""
+        events = []
+        for r in self.to_records():
+            ev = {"name": r["name"], "cat": r["cat"], "ph": r["ph"],
+                  "ts": r["ts"], "pid": self._pid, "tid": 1,
+                  "args": r["args"]}
+            if r["ph"] == "X":
+                ev["dur"] = r["dur"]
+            else:
+                ev["s"] = "t"       # instant scope: thread
+            events.append(ev)
+        blob = {"traceEvents": events, "displayTimeUnit": "ms"}
+        d = os.path.dirname(os.path.abspath(path))
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(blob, f)
+        return path
+
+    def summary(self) -> str:
+        """Per-span-name aggregate table over the recorded spans."""
+        spans = [r for r in self.records if r["ph"] == "X"]
+        if not spans:
+            return "no spans recorded"
+        agg = {}
+        for r in spans:
+            a = agg.setdefault(r["name"], [0, 0.0])
+            a[0] += 1
+            a[1] += r["dur"]
+        # wall = top-level span time only (nested spans double-count)
+        wall = sum(r["dur"] for r in spans if r["depth"] == 0) or 1.0
+        lines = [f"{'span':<24} {'count':>6} {'total_ms':>10} "
+                 f"{'mean_ms':>9} {'share':>6}"]
+        for name, (n, tot) in sorted(agg.items(),
+                                     key=lambda kv: -kv[1][1]):
+            lines.append(f"{name:<24} {n:>6} {tot / 1e3:>10.2f} "
+                         f"{tot / n / 1e3:>9.3f} "
+                         f"{min(tot / wall, 1.0):>5.0%}")
+        return "\n".join(lines)
+
+
+class NullTracer:
+    """The ``obs="none"`` tracer: every method is a no-op.  ``span``
+    hands back one shared nullcontext, so an instrumented call site
+    costs an attribute lookup and nothing else."""
+
+    active = False
+    _null = contextlib.nullcontext()
+
+    def span(self, name: str, cat: str = "run", **args):
+        return self._null
+
+    def profile_to(self, profile_dir):
+        return self._null
+
+    def instant(self, name: str, cat: str = "run", **args):
+        pass
+
+    def to_records(self) -> List[dict]:
+        return []
+
+    def export(self, path: str):
+        raise ValueError(
+            "tracing is off (obs='none' builds a NullTracer); build "
+            "the session with spec.obs='basic' or 'full' to record "
+            "spans")
+
+    def summary(self) -> str:
+        return "tracing off (obs='none')"
+
+
+def _safe(v):
+    """JSON-safe arg value (numbers/strings pass, the rest reprs)."""
+    return v if isinstance(v, (int, float, str, bool, type(None))) \
+        else repr(v)

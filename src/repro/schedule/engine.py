@@ -128,6 +128,14 @@ class LaneScheduleImpl:
     def round_end(self, state):
         return state
 
+    @property
+    def identity_select(self):
+        """True when ``select`` statically returns ``h_now`` itself
+        (depth-0 ring): the step builder then skips the second
+        forward pass the ring formulation needs (see
+        make_sched_step_fn)."""
+        return self.max_k == 0
+
 
 class DoubleBufferImpl:
     """Round-granularity pipelining: every step of round t consumes
@@ -199,6 +207,11 @@ def make_sched_step_fn(model, opt, pcfg, impl, layout=None,
                 grads, opt_state, params)
         return params, opt_state
 
+    # fifth (optional) impl hook: obs taps record the loss vector and
+    # grads the step already computed; None for every tap-free impl,
+    # so non-obs engines are textually unchanged
+    tap = getattr(impl, "tap_step", None)
+
     if fl == "masked":
         hidden = partial(P.client_hidden, model, pcfg.exchange_at)
 
@@ -220,6 +233,8 @@ def make_sched_step_fn(model, opt, pcfg, impl, layout=None,
                 params, xm, own)
             params, opt_state = update(params, opt_state, grads,
                                        step_idx)
+            if tap is not None:
+                sstate = tap(sstate, losses, grads, lay)
             return (params, opt_state, sstate,
                     P._masked_mean(losses, lay.client_mask))
     else:
@@ -230,6 +245,40 @@ def make_sched_step_fn(model, opt, pcfg, impl, layout=None,
 
         def h_all_fn(ps, lay, xb):
             return jax.vmap(hidden_from)(ps, first(ps, xb, lay))
+
+        if getattr(impl, "identity_select", False):
+            # depth-0 select statically returns h_now, so the
+            # reference stack IS the stop-gradient of the forward the
+            # loss needs anyway: compute it ONCE inside grad (the
+            # legacy sync formulation -- scheduled_exchange with
+            # h_ref == stop_gradient(h_all) is bitwise
+            # hidden_output_exchange, see repro.core.exchange) and
+            # run select afterwards purely for its observers (obs
+            # taps).  The ring formulation below pays a second
+            # forward pass to materialize h_now before grad.
+            def step(params, opt_state, lay, eff_mask, sstate, xb, yb,
+                     step_idx):
+                def total(ps):
+                    h_all = h_all_fn(ps, lay, xb)
+                    h_now = jax.lax.stop_gradient(h_all)
+                    h = scheduled_exchange(h_all, h_now, eff_mask)
+                    logits = jax.vmap(through)(ps, h)
+                    losses = jax.vmap(P._ce, in_axes=(0, None))(
+                        logits, yb)
+                    return ((losses * lay.client_mask).sum(),
+                            (losses, h_now))
+
+                grads, (losses, h_now) = jax.grad(
+                    total, has_aux=True)(params)
+                _, sstate = impl.select(sstate, h_now)
+                params, opt_state = update(params, opt_state, grads,
+                                           step_idx)
+                if tap is not None:
+                    sstate = tap(sstate, losses, grads, lay)
+                return (params, opt_state, sstate,
+                        P._masked_mean(losses, lay.client_mask))
+
+            return step
 
         def step(params, opt_state, lay, eff_mask, sstate, xb, yb,
                  step_idx):
@@ -246,6 +295,8 @@ def make_sched_step_fn(model, opt, pcfg, impl, layout=None,
             grads, losses = jax.grad(total, has_aux=True)(params)
             params, opt_state = update(params, opt_state, grads,
                                        step_idx)
+            if tap is not None:
+                sstate = tap(sstate, losses, grads, lay)
             return (params, opt_state, sstate,
                     P._masked_mean(losses, lay.client_mask))
 

@@ -59,7 +59,12 @@ from repro.wire import (WirePayload, get_wire_plan, pack, unpack,
 
 # 1: initial schema -- results/latency/throughput/cache/counters,
 # spec_hash-stamped (the serving analog of RunResult's versioning)
-SERVE_SCHEMA_VERSION = 1
+# 2 (PR 10): reports carry an ``obs`` field -- the unified
+# repro.obs.Telemetry record (serve counters + latency + tracer
+# spans) as a JSON-safe dict; every PR-8 key is unchanged, so the
+# change is additive.  (The record is named ``obs`` because
+# ``telemetry`` has been the per-request timing log since schema 1.)
+SERVE_SCHEMA_VERSION = 2
 
 
 def split_features(layout, x) -> Dict[int, np.ndarray]:
@@ -153,7 +158,9 @@ class ServeReport:
     """Versioned serving record -- the RunResult analog for
     ``Session.serve()``.  ``results`` maps uid -> the live per-client
     prediction vector (bitwise what ``Session.predict`` returns for
-    that row); ``telemetry`` is the per-request timing log."""
+    that row); ``telemetry`` is the per-request timing log; ``obs``
+    is the unified repro.obs.Telemetry record (JSON-safe dict: wall,
+    serve counters, latency stats, tracer spans)."""
     spec_hash: str
     results: Dict[Any, np.ndarray]
     telemetry: List[dict] = field(default_factory=list)
@@ -164,6 +171,7 @@ class ServeReport:
     waiting: List[Any] = field(default_factory=list)
     rejected: List[Any] = field(default_factory=list)
     evicted: List[Any] = field(default_factory=list)
+    obs: Optional[dict] = None
     schema_version: int = SERVE_SCHEMA_VERSION
 
     def to_dict(self) -> dict:
@@ -182,6 +190,7 @@ class ServeReport:
             "waiting": [str(u) for u in self.waiting],
             "rejected": [str(u) for u in self.rejected],
             "evicted": [str(u) for u in self.evicted],
+            "obs": None if self.obs is None else dict(self.obs),
         }
 
 
@@ -260,7 +269,11 @@ class FederatedServer:
     def __init__(self, model, pcfg, layout, params, *, spec_hash="",
                  max_slots: int = 8, queue_cap: Optional[int] = None,
                  cache=128, overflow: str = "reject",
-                 first_layer_fn=None):
+                 first_layer_fn=None, tracer=None):
+        from repro.obs import NullTracer
+        # request-lifecycle instants + step spans; the NullTracer
+        # default keeps the pre-obs serving path instrument-free
+        self.tracer = tracer if tracer is not None else NullTracer()
         if max_slots < 1:
             raise ValueError(f"max_slots must be >= 1, got {max_slots}")
         if queue_cap is not None and queue_cap < 1:
@@ -382,6 +395,7 @@ class FederatedServer:
         self._info[req.uid] = rec
         self._assembly[req.uid] = rec
         self.submitted += 1
+        self.tracer.instant("submit", cat="serve", uid=str(req.uid))
         if self.cache is not None:
             h = self.cache.lookup((self.spec_hash, req.entity_id))
             if h is not None:
@@ -420,6 +434,8 @@ class FederatedServer:
                 f"{want} features (Layout.sizes[{client}]), got "
                 f"{payload.shape}")
         rec["slices"][client] = payload
+        self.tracer.instant("offer", cat="serve", uid=str(uid),
+                            client=client)
         if len(rec["slices"]) == self.n_live:
             x = np.zeros((self._F,), np.float32)
             for i, sl in rec["slices"].items():
@@ -447,6 +463,9 @@ class FederatedServer:
             self.evicted.append(old)
         rec["status"] = "ready"
         self._ready.append(rec["uid"])
+        self.tracer.instant("ready", cat="serve",
+                            uid=str(rec["uid"]),
+                            cached=bool(rec["cached"]))
 
     # ------------------------------------------------------------------
     def _admit(self):
@@ -461,6 +480,8 @@ class FederatedServer:
             rec["t_admit"] = time.perf_counter()
             rec["status"] = "in_flight"
             self.admission_log.append(uid)
+            self.tracer.instant("admit", cat="serve", uid=str(uid),
+                                slot=s)
             self._slots[s] = uid
             self._mbuf[s] = 1.0
             if rec["cached"]:
@@ -484,12 +505,14 @@ class FederatedServer:
         self._admit()
         if self.occupancy == 0:
             return 0
-        preds, h_all = self._step_fn(
-            self.params, jnp.asarray(self._xbuf),
-            jnp.asarray(self._hbuf), jnp.asarray(self._ubuf),
-            jnp.asarray(self._mbuf), self._lay)
-        preds = np.asarray(preds)
-        h_all = np.asarray(h_all)
+        with self.tracer.span("serve_step", cat="serve",
+                              occupancy=self.occupancy):
+            preds, h_all = self._step_fn(
+                self.params, jnp.asarray(self._xbuf),
+                jnp.asarray(self._hbuf), jnp.asarray(self._ubuf),
+                jnp.asarray(self._mbuf), self._lay)
+            preds = np.asarray(preds)
+            h_all = np.asarray(h_all)
         self.steps += 1
         done = 0
         now = time.perf_counter()
@@ -502,6 +525,9 @@ class FederatedServer:
             rec["latency_s"] = now - rec["t_submit"]
             rec["queue_s"] = rec["t_admit"] - rec["t_ready"]
             rec["status"] = "done"
+            self.tracer.instant("complete", cat="serve",
+                                uid=str(uid),
+                                latency_ms=rec["latency_s"] * 1e3)
             if self.cache is not None and not rec["cached"]:
                 h_slot = h_all[:, s, :].copy()
                 if not self._plan.is_none:
@@ -542,6 +568,19 @@ class FederatedServer:
         wall = (self._t_last - self._t0) if (
             self._t0 is not None and self._t_last is not None) else 0.0
         thr = self.completed / wall if wall > 0 else 0.0
+        from repro.obs import Telemetry
+        unified = Telemetry(
+            wall_s=wall, steps=self.steps, steps_per_sec=(
+                self.steps / wall if wall > 0 else 0.0),
+            serve={"submitted": self.submitted,
+                   "completed": self.completed,
+                   "rejected": len(self.rejected),
+                   "evicted": len(self.evicted),
+                   "throughput_rps": thr, **{
+                       f"latency_{k}_ms": v for k, v in (
+                           latency_ms or {}).items()}},
+            spans=(self.tracer.to_records()
+                   if self.tracer.active else None))
         return ServeReport(
             spec_hash=self.spec_hash,
             results=dict(self.results),
@@ -562,7 +601,8 @@ class FederatedServer:
                       "max_slots": self.max_slots},
             waiting=list(self._assembly),
             rejected=list(self.rejected),
-            evicted=list(self.evicted))
+            evicted=list(self.evicted),
+            obs=unified.to_dict())
 
     @property
     def stats(self) -> dict:

@@ -200,7 +200,7 @@ def test_register_custom_mode():
         register_mode("echo", lambda spec: EchoRunner(spec))
     rr = build(ExperimentSpec(dataset="titanic", mode="echo")).run()
     assert rr.metrics == {"f1": 1.0, "acc": 1.0}
-    assert rr.schema_version == 4
+    assert rr.schema_version == 5
 
 
 # ---------------------------------------------------------------------------
@@ -405,10 +405,10 @@ def test_checkpoint_roundtrips_padded_trees(tmp_path):
 def test_run_result_schema_and_serialization():
     rr = build(ExperimentSpec(dataset="titanic", rounds=1, epochs=1,
                               seeds=(0,))).run()
-    assert isinstance(rr, RunResult) and rr.schema_version == 4
+    assert isinstance(rr, RunResult) and rr.schema_version == 5
     assert rr.spec_hash == rr.spec.spec_hash and len(rr.spec_hash) == 16
     d = json.loads(json.dumps(rr.to_dict()))
-    assert d["schema_version"] == 4
+    assert d["schema_version"] == 5
     assert d["spec"]["dataset"] == "titanic"
     assert {"metrics", "history", "timings", "git_sha",
             "spec_hash"} <= set(d)
